@@ -1,0 +1,32 @@
+"""Fig. 8: KFLR (exact factor, C columns) vs KFAC (MC factor, 1 column)
+as the output dimension C grows — the paper's CIFAR-100 scaling argument."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.configs.papernets import mlp
+from repro.core import CrossEntropyLoss, ExtensionConfig, KFAC, KFLR, run
+
+
+def main():
+    loss = CrossEntropyLoss()
+    for C in (10, 50, 100):
+        model = mlp(n_classes=C, in_dim=64, hidden=(128, 128), act="relu")
+        params = model.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+        y = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, C)
+
+        kfac_fn = jax.jit(lambda p, r: run(model, p, x, y, loss,
+                                           extensions=(KFAC,), rng=r).ext)
+        t_kfac = time_fn(kfac_fn, params, jax.random.PRNGKey(3))
+        emit(f"fig8/kfac/C{C}", t_kfac, "mc_1col")
+
+        kflr_fn = jax.jit(lambda p, r: run(model, p, x, y, loss,
+                                           extensions=(KFLR,), rng=r).ext)
+        t_kflr = time_fn(kflr_fn, params, jax.random.PRNGKey(3))
+        emit(f"fig8/kflr/C{C}", t_kflr, f"x{t_kflr / t_kfac:.1f}_vs_kfac")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Fig. 9: Hessian diagonal vs GGN diagonal once a non-piecewise-linear
+activation (sigmoid) appears — residual ± factors make DiagHessian an
+order of magnitude more expensive."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.configs.papernets import mlp
+from repro.core import CrossEntropyLoss, DiagGGN, DiagHessian, run
+
+
+def main():
+    loss = CrossEntropyLoss()
+    for act, tag in (("relu", "relu"), ("sigmoid", "sigmoid")):
+        model = mlp(n_classes=10, in_dim=32, hidden=(64, 48), act=act)
+        params = model.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+        y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+
+        ggn_fn = jax.jit(lambda p: run(model, p, x, y, loss,
+                                       extensions=(DiagGGN,)).ext)
+        t_ggn = time_fn(ggn_fn, params)
+        emit(f"fig9/diag_ggn/{tag}", t_ggn, "")
+
+        h_fn = jax.jit(lambda p: run(model, p, x, y, loss,
+                                     extensions=(DiagHessian,)).ext)
+        t_h = time_fn(h_fn, params)
+        emit(f"fig9/diag_hessian/{tag}", t_h, f"x{t_h / t_ggn:.1f}_vs_ggn")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Pallas kernel timings (interpret mode — correctness path on CPU) vs the
+jnp reference path.  On-TPU the kernels fuse the square/accumulate into
+VMEM; here the numbers only document that the interpret path is exercised.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def main():
+    k = jax.random.PRNGKey(0)
+    A = jax.random.normal(k, (8, 64, 128))
+    B = jax.random.normal(jax.random.fold_in(k, 1), (8, 64, 128))
+    for name, kfn, rfn, args in [
+        ("sq_matmul", ops.sq_matmul, ref.sq_matmul, (A[:, 0], B[:, 0])),
+        ("per_sample_moment", ops.per_sample_moment, ref.per_sample_moment,
+         (A, B)),
+        ("batch_l2", ops.batch_l2, ref.batch_l2, (A, B)),
+    ]:
+        t_ref = time_fn(jax.jit(rfn), *args)
+        t_k = time_fn(kfn, *args)
+        emit(f"kernels/{name}/jnp_ref", t_ref, "")
+        emit(f"kernels/{name}/pallas_interpret", t_k, "correctness_path")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Fig. 7/10/11: the naive damped update (Eq. 7) with BackPACK curvatures
+vs momentum-SGD / Adam baselines, per-iteration progress on synthetic
+classification (DeepOBS protocol, scaled to CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.papernets import c2d2, mlp
+from repro.core import (
+    CrossEntropyLoss,
+    DiagGGN,
+    DiagGGNMC,
+    ExtensionConfig,
+    KFAC,
+    KFLR,
+    KFRA,
+    run,
+)
+from repro.optim import adamw, curvature_optimizer, momentum_sgd
+from repro.optim.optimizers import apply_updates
+
+LOSS = CrossEntropyLoss()
+STEPS = 60
+
+
+def _data(key, n=256, d=32, c=10):
+    x = jax.random.normal(key, (n, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, c))
+    y = jnp.argmax(x @ w + 0.5 * jax.random.normal(
+        jax.random.fold_in(key, 2), (n, c)), axis=-1)
+    return x, y
+
+
+def _train(model, params, opt, ext, cfg, x, y, batch=64):
+    opt_state = opt.init(params)
+    losses = []
+    n = x.shape[0]
+
+    @jax.jit
+    def step(params, opt_state, i):
+        lo = (i * batch) % n
+        xb = jax.lax.dynamic_slice_in_dim(x, lo, batch)
+        yb = jax.lax.dynamic_slice_in_dim(y, lo, batch)
+        if ext is None:
+            res = run(model, params, xb, yb, LOSS)
+            ups, new_os = opt.update(res.grads, opt_state, params)
+        else:
+            res = run(model, params, xb, yb, LOSS, extensions=(ext,),
+                      cfg=cfg, rng=jax.random.fold_in(jax.random.PRNGKey(7), i))
+            ups, new_os = opt.update(res.grads, opt_state, params,
+                                     curv=res.ext[ext.name])
+        return apply_updates(params, ups), new_os, res.loss
+
+    for i in range(STEPS):
+        params, opt_state, lv = step(params, opt_state, jnp.int32(i))
+        losses.append(float(lv))
+    return losses
+
+
+def main():
+    x, y = _data(jax.random.PRNGKey(0))
+    runs = [
+        ("momentum", momentum_sgd(0.05), None),
+        ("adam", adamw(3e-3), None),
+        ("diag_ggn", curvature_optimizer(0.5, 1e-1, "diag_ggn"), DiagGGN),
+        ("diag_ggn_mc", curvature_optimizer(0.5, 1e-1, "diag_ggn_mc"), DiagGGNMC),
+        ("kfac", curvature_optimizer(0.5, 1e-1, "kfac", stat_decay=0.5), KFAC),
+        ("kflr", curvature_optimizer(0.5, 1e-1, "kflr", stat_decay=0.5), KFLR),
+        ("kfra", curvature_optimizer(0.5, 1e-1, "kfra", stat_decay=0.5), KFRA),
+    ]
+    for name, opt, ext in runs:
+        model = mlp(n_classes=10, in_dim=32, hidden=(64,), act="tanh")
+        params = model.init(jax.random.PRNGKey(1))
+        losses = _train(model, params, opt, ext, ExtensionConfig(), x, y)
+        emit(f"fig7/mlp/{name}", -1.0,
+             f"loss0={losses[0]:.3f}_loss{STEPS}={losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

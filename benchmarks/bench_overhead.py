@@ -1,0 +1,80 @@
+"""Fig. 6: overhead of gradient + extension vs gradient alone.
+
+Reported on the paper's 3C3D conv net (reduced for CPU) and on a reduced
+transformer — the quantities that reuse the standard sweep (L2 norm,
+moments, variance, DiagGGN-MC, KFAC) should cost a small multiple of the
+gradient; exact-factor quantities scale with the output dimension.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.configs import ARCHS, SHAPES
+from repro.configs.papernets import c3d3
+from repro.core import (
+    BatchGrad,
+    BatchL2,
+    CrossEntropyLoss,
+    DiagGGN,
+    DiagGGNMC,
+    ExtensionConfig,
+    KFAC,
+    KFLR,
+    SecondMoment,
+    Variance,
+    run,
+)
+from repro.data.synthetic import batch_for
+from repro.nn.models import build_model
+
+EXT_SETS = [
+    ("grad", ()),
+    ("batch_grad", (BatchGrad,)),
+    ("batch_l2", (BatchL2,)),
+    ("second_moment", (SecondMoment,)),
+    ("variance", (Variance,)),
+    ("diag_ggn_mc", (DiagGGNMC,)),
+    ("kfac", (KFAC,)),
+    ("diag_ggn_exact", (DiagGGN,)),
+    ("kflr", (KFLR,)),
+]
+
+
+def _bench(tag, model, params, x, y, cfg=None):
+    loss = CrossEntropyLoss()
+    base = None
+    for name, exts in EXT_SETS:
+        fn = jax.jit(lambda p, r: run(model, p, x, y, loss, extensions=exts,
+                                      cfg=cfg or ExtensionConfig(), rng=r).ext
+                     if exts else run(model, p, x, y, loss).grads)
+        try:
+            t = time_fn(fn, params, jax.random.PRNGKey(1))
+        except Exception as e:  # exact factors can legitimately OOM-scale
+            emit(f"fig6/{tag}/{name}", -1.0, f"skipped:{type(e).__name__}")
+            continue
+        if base is None:
+            base = t
+        emit(f"fig6/{tag}/{name}", t, f"x{t / base:.2f}_vs_grad")
+
+
+def main():
+    model = c3d3(n_classes=10, in_ch=3, img=8)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8, 8, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+    _bench("conv3c3d", model, params, x, y)
+
+    cfg = ARCHS["stablelm-1.6b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=16, global_batch=4)
+    batch = batch_for(cfg, shape, 0)
+    _bench("transformer", model, params, batch["inputs"], batch["labels"],
+           cfg=ExtensionConfig(class_chunk=97))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Deliverable (g): render the roofline table from dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load(tag="baseline"):
+    path = os.path.join(ART, f"dryrun_{tag}.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    data = load("baseline")
+    if not data:
+        print("fig_roofline/missing,-1,run_repro.launch.dryrun_first")
+        return
+    for key in sorted(data):
+        v = data[key]
+        if "error" in v:
+            print(f"roofline/{key},-1,{v['error'][:40]}")
+            continue
+        r = v["roofline"]
+        name = key.replace("|", "/")
+        us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        print(f"roofline/{name},{us:.0f},"
+              f"dom={r['dominant']};roof%={100 * r.get('roofline_fraction', 0):.3f};"
+              f"comp={r['compute_s']:.3e};mem={r['memory_s']:.3e};"
+              f"coll={r['collective_s']:.3e};useful={r.get('useful_compute_ratio', 0):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def baseline_table(mesh="single"):
+    d = json.load(open(os.path.join(ART, "dryrun_baseline.json")))
+    lines = [
+        "| arch | shape | params | dominant | compute s | memory s | "
+        "collective s | roofline % | useful ratio | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for k in sorted(d):
+        v = d[k]
+        if v.get("mesh") != mesh or "error" in v:
+            continue
+        r = v["roofline"]
+        lines.append(
+            f"| {v['arch']} | {v['shape']} | {v['n_params']/1e9:.2f}B | "
+            f"{r['dominant'].replace('_s','')} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{100*r.get('roofline_fraction',0):.3f} | "
+            f"{r.get('useful_compute_ratio',0):.2f} | "
+            f"{v['memory']['temp_size_in_bytes']/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def multi_pod_summary():
+    d = json.load(open(os.path.join(ART, "dryrun_baseline.json")))
+    n_ok = sum(1 for v in d.values()
+               if v.get("mesh") == "multi" and "error" not in v)
+    n_err = sum(1 for v in d.values()
+                if v.get("mesh") == "multi" and "error" in v)
+    return n_ok, n_err
+
+
+def hillclimb_table(prefix):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, f"dryrun_{prefix}*.json"))):
+        tag = os.path.basename(f).replace("dryrun_", "").replace(".json", "")
+        d = json.load(open(f))
+        for v in d.values():
+            if "error" in v:
+                rows.append((tag, None, v["error"][:50]))
+            else:
+                rows.append((tag, v, None))
+    lines = ["| iteration | opts | compute s | memory s | collective s | "
+             "roofline % | temp GB/dev |",
+             "|---|---|---|---|---|---|---|"]
+    for tag, v, err in rows:
+        if err:
+            lines.append(f"| {tag} | — | — | — | — | ERROR | {err} |")
+            continue
+        r = v["roofline"]
+        opts = ",".join(v["opts"]) or "(baseline)"
+        if v.get("curvature"):
+            opts += f" curv={v['curvature']}"
+        lines.append(
+            f"| {tag} | {opts} | {r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.4f} | {100*r.get('roofline_fraction',0):.3f} | "
+            f"{v['memory']['temp_size_in_bytes']/2**30:.0f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    if which == "baseline":
+        print(baseline_table())
+    elif which == "multi":
+        print(multi_pod_summary())
+    else:
+        print(hillclimb_table(which))

@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig3  individual gradients: for-loop vs vectorized     (paper Fig. 3)
+  fig6  extension overhead vs plain gradient             (paper Fig. 6)
+  fig7  curvature optimizers vs SGD/Adam                 (paper Fig. 7/10/11)
+  fig8  KFLR vs KFAC output-dimension scaling            (paper Fig. 8)
+  fig9  Hessian diag vs GGN diag with sigmoid            (paper Fig. 9)
+  kernels   Pallas kernels (interpret)                   (deliverable c)
+  roofline  dry-run roofline table                       (deliverable g)
+"""
+import sys
+
+from benchmarks import (
+    bench_c_scaling,
+    bench_hessian_diag,
+    bench_individual,
+    bench_kernels,
+    bench_optimizers,
+    bench_overhead,
+    bench_roofline,
+)
+
+ALL = {
+    "fig3": bench_individual.main,
+    "fig6": bench_overhead.main,
+    "fig7": bench_optimizers.main,
+    "fig8": bench_c_scaling.main,
+    "fig9": bench_hessian_diag.main,
+    "kernels": bench_kernels.main,
+    "roofline": bench_roofline.main,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        ALL[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver (deliverable b): train a ~100M-param transformer with
+the paper's preconditioned update.  NOTE: defaults are sized for a real
+accelerator; on CPU use --steps 20 --seq 32 --batch 4 (~15 min).
+
+Original summary: train a ~100M-param transformer for a
+few hundred steps with the paper's damped curvature-preconditioned update
+(Eq. 7), KFAC backend, against an AdamW baseline.
+
+    PYTHONPATH=src python examples/curvature_training.py [--steps 300]
+
+Model: 12L, d=768, 12 heads, d_ff=3072, vocab=8192 ≈ 98M params — runs on
+CPU in minutes with seq 64/batch 8 (same code paths as the pod-scale
+configs; see repro.launch.train for the full-size entry).
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import SHAPES
+from repro.configs.base import ModelConfig
+from repro.core import DiagGGNMC, ExtensionConfig, KFAC
+from repro.nn.models import build_model
+from repro.optim import adamw, curvature_optimizer
+from repro.train.loop import LoopConfig, fit
+
+CFG_100M = ModelConfig(
+    name="demo-100m", kind="dense", family="dense",
+    n_layers=12, d_model=768, n_heads=12, kv_heads=12, d_ff=3072,
+    vocab=8192, act="gelu", norm="rmsnorm", glu=False, dtype="float32",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    model = build_model(CFG_100M)
+    n_params = CFG_100M.param_count(model)
+    print(f"model: {n_params/1e6:.1f}M params")
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=args.seq,
+                                global_batch=args.batch)
+    loop = LoopConfig(steps=args.steps, log_every=20)
+
+    t0 = time.time()
+    print("\n=== AdamW baseline ===")
+    _, _, hist_adam, _ = fit(model, CFG_100M, shape, adamw(3e-4), loop)
+
+    print("\n=== KFAC-preconditioned (paper Eq. 7) ===")
+    opt = curvature_optimizer(0.1, damping=0.3, curvature="kfac",
+                              stat_decay=0.95)
+    _, _, hist_kfac, _ = fit(model, CFG_100M, shape, opt,
+                             loop, extensions=(KFAC,),
+                             ext_cfg=ExtensionConfig(mc_samples=1))
+
+    print("\n=== DiagGGN-MC-preconditioned ===")
+    opt = curvature_optimizer(0.05, damping=0.3, curvature="diag_ggn_mc")
+    _, _, hist_dg, _ = fit(model, CFG_100M, shape, opt,
+                           loop, extensions=(DiagGGNMC,),
+                           ext_cfg=ExtensionConfig(mc_samples=1))
+
+    print(f"\nfinal losses after {args.steps} steps "
+          f"({time.time()-t0:.0f}s total):")
+    print(f"  adamw        {hist_adam[-1]['loss']:.4f}")
+    print(f"  kfac         {hist_kfac[-1]['loss']:.4f}")
+    print(f"  diag_ggn_mc  {hist_dg[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

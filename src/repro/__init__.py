@@ -1,0 +1,2 @@
+"""repro — BackPACK (ICLR 2020) as a multi-pod JAX training framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,35 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``ARCHS``."""
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    Shape,
+    input_specs,
+    skipped_shapes,
+    supported_shapes,
+)
+
+from repro.configs.internvl2_2b import ARCH as internvl2_2b
+from repro.configs.granite_moe_1b import ARCH as granite_moe_1b
+from repro.configs.deepseek_v2_lite import ARCH as deepseek_v2_lite
+from repro.configs.stablelm_1_6b import ARCH as stablelm_1_6b
+from repro.configs.gemma3_12b import ARCH as gemma3_12b
+from repro.configs.h2o_danube3_4b import ARCH as h2o_danube3_4b
+from repro.configs.codeqwen15_7b import ARCH as codeqwen15_7b
+from repro.configs.whisper_tiny import ARCH as whisper_tiny
+from repro.configs.rwkv6_3b import ARCH as rwkv6_3b
+from repro.configs.hymba_1_5b import ARCH as hymba_1_5b
+
+ARCHS = {
+    c.name: c
+    for c in [
+        internvl2_2b, granite_moe_1b, deepseek_v2_lite, stablelm_1_6b,
+        gemma3_12b, h2o_danube3_4b, codeqwen15_7b, whisper_tiny,
+        rwkv6_3b, hymba_1_5b,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,101 @@
+"""The paper's own benchmark networks (DeepOBS, Table 3) as module trees.
+
+LogReg (MNIST), 2C2D (F-MNIST), 3C3D (CIFAR-10), All-CNN-C (CIFAR-100) —
+used by the Fig. 3/6/7/8/9 benchmark harnesses and trained on synthetic
+image data.  Conv layers use the unfold formulation so all BackPACK
+extensions apply (Grosse & Martens 2016).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.module import Activation, Dense, Sequential
+from repro.nn.layers import Conv2d, Flatten, MaxPool2d
+
+
+def logreg(n_classes=10, in_dim=784):
+    return Sequential([Dense(in_dim, n_classes)])
+
+
+def mlp(n_classes=10, in_dim=784, hidden=(128, 64), act="sigmoid"):
+    mods = []
+    d = in_dim
+    for h in hidden:
+        mods += [Dense(d, h), Activation(act)]
+        d = h
+    mods.append(Dense(d, n_classes))
+    return Sequential(mods)
+
+
+def c2d2(n_classes=10, in_ch=1, img=28):
+    """2 conv + 2 dense (the paper's 2C2D, scaled by `img`)."""
+    after = img // 4
+    return Sequential([
+        Conv2d(in_ch, 32, kernel=5, padding="SAME"), Activation("relu"),
+        MaxPool2d(2),
+        Conv2d(32, 64, kernel=5, padding="SAME"), Activation("relu"),
+        MaxPool2d(2),
+        Flatten(),
+        Dense(after * after * 64, 256), Activation("relu"),
+        Dense(256, n_classes),
+    ])
+
+
+def c3d3(n_classes=10, in_ch=3, img=32):
+    """3 conv + 3 dense (the paper's 3C3D on CIFAR-10)."""
+    after = img // 8
+    return Sequential([
+        Conv2d(in_ch, 64, kernel=5, padding="SAME"), Activation("relu"),
+        MaxPool2d(2),
+        Conv2d(64, 96, kernel=3, padding="SAME"), Activation("relu"),
+        MaxPool2d(2),
+        Conv2d(96, 128, kernel=3, padding="SAME"), Activation("relu"),
+        MaxPool2d(2),
+        Flatten(),
+        Dense(after * after * 128, 512), Activation("relu"),
+        Dense(512, 256), Activation("relu"),
+        Dense(256, n_classes),
+    ])
+
+
+def allcnnc(n_classes=100, in_ch=3, img=32, width=96):
+    """All-CNN-C (Springenberg 2015): 9 conv layers, no dense."""
+    w2 = 2 * width
+    return Sequential([
+        Conv2d(in_ch, width, 3), Activation("relu"),
+        Conv2d(width, width, 3), Activation("relu"),
+        Conv2d(width, width, 3, stride=2), Activation("relu"),
+        Conv2d(width, w2, 3), Activation("relu"),
+        Conv2d(w2, w2, 3), Activation("relu"),
+        Conv2d(w2, w2, 3, stride=2), Activation("relu"),
+        Conv2d(w2, w2, 3, padding="VALID"), Activation("relu"),
+        Conv2d(w2, w2, 1), Activation("relu"),
+        Conv2d(w2, n_classes, 1),
+        GlobalAvgPool(),
+    ])
+
+
+class GlobalAvgPool(Sequential):
+    def __init__(self):
+        super().__init__([])
+
+    def apply(self, params, x):
+        return jnp.mean(x, axis=(1, 2))
+
+    def forward_tape(self, params, x):
+        return self.apply(params, x), x
+
+    def backward(self, params, tape, g, exts, cfg):
+        import jax
+
+        _, vjp = jax.vjp(lambda xx: self.apply((), xx), tape)
+        return vjp(g)[0], (), ()
+
+    def jac_t_mat(self, params, tape, M):
+        import jax
+
+        _, vjp = jax.vjp(lambda xx: self.apply((), xx), tape)
+        return jax.vmap(lambda m: vjp(m)[0])(M)
+
+    def curv_backward(self, params, tape, S, exts, cfg, ext_prefix):
+        return self.jac_t_mat(params, tape, S), ()

@@ -1,0 +1,52 @@
+"""repro.core — BackPACK's extended backpropagation, in JAX.
+
+Public API::
+
+    from repro.core import (
+        Dense, Embedding, RMSNorm, LayerNorm, Activation, Lambda,
+        Sequential, Parallel, Residual, ScanStack, Module,
+        CrossEntropyLoss, MSELoss,
+        BatchGrad, BatchL2, SecondMoment, Variance,
+        DiagGGN, DiagGGNMC, DiagHessian, KFAC, KFLR, KFRA,
+        ExtensionConfig, run,
+    )
+"""
+from .extensions import (
+    ALL_EXTENSIONS,
+    BatchDot,
+    BatchGrad,
+    BatchL2,
+    DiagGGN,
+    DiagGGNMC,
+    DiagHessian,
+    Extension,
+    ExtensionConfig,
+    KFAC,
+    KFLR,
+    KFRA,
+    SecondMoment,
+    Variance,
+    by_name,
+)
+from .loss_hessian import CrossEntropyLoss, MSELoss
+from .module import (
+    Activation,
+    Axes,
+    Dense,
+    Embedding,
+    GroupRMSNorm,
+    Lambda,
+    LayerNorm,
+    Module,
+    Parallel,
+    Residual,
+    RMSNorm,
+    ScanStack,
+    Sequential,
+    UnsupportedSweep,
+    is_axes,
+    per_sample_l2,
+    per_sample_sq_sum,
+)
+from .engine import Results, loss_and_grad, run
+from . import kron, oracle

@@ -1,0 +1,78 @@
+"""Extension declarations — the quantities BackPACK extracts (paper Table 1/5).
+
+An :class:`Extension` is a pure declaration; the engine inspects the set of
+requested extensions to decide which backward sweeps to run:
+
+  * ``first``  — the standard cotangent sweep (always runs: it also produces
+                 the batch gradient).  BatchGrad / BatchL2 / SecondMoment /
+                 Variance / KFAC-A-factor hook in here.
+  * ``ggn``    — a symmetric-factor sweep propagating ``S`` (paper Eq. 18),
+                 either with the exact loss-Hessian factorization (DiagGGN,
+                 KFLR) or a Monte-Carlo one (DiagGGNMC, KFAC).
+  * ``kfra``   — the batch-averaged ``Ḡ`` recursion (paper Eq. 24); chain
+                 (Sequential-of-Dense/activation) models only.
+  * ``hess``   — exact Hessian diagonal via residual ± factors (Eq. 25/26);
+                 chain models only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Extension:
+    name: str
+    sweep: str  # 'first' | 'ggn_exact' | 'ggn_mc' | 'kfra' | 'hess'
+
+
+# --- first-order extensions (paper §2.2, App. A.1) -------------------------
+BatchGrad = Extension("batch_grad", "first")
+BatchL2 = Extension("batch_l2", "first")
+# beyond-paper (BackPACK-2.x-style): pairwise per-sample gradient dots —
+# gradient-similarity / conflict telemetry, Gram-trick computed
+BatchDot = Extension("batch_dot", "first")
+SecondMoment = Extension("second_moment", "first")
+Variance = Extension("variance", "first")
+
+# --- second-order extensions (paper §2.3, App. A.2) -------------------------
+DiagGGN = Extension("diag_ggn", "ggn_exact")
+DiagGGNMC = Extension("diag_ggn_mc", "ggn_mc")
+KFLR = Extension("kflr", "ggn_exact")
+KFAC = Extension("kfac", "ggn_mc")
+KFRA = Extension("kfra", "kfra")
+DiagHessian = Extension("diag_hessian", "hess")
+
+ALL_EXTENSIONS = (
+    BatchGrad,
+    BatchL2,
+    BatchDot,
+    SecondMoment,
+    Variance,
+    DiagGGN,
+    DiagGGNMC,
+    KFLR,
+    KFAC,
+    KFRA,
+    DiagHessian,
+)
+_BY_NAME = {e.name: e for e in ALL_EXTENSIONS}
+
+
+def by_name(name: str) -> Extension:
+    return _BY_NAME[name]
+
+
+def sweeps_needed(extensions) -> set:
+    return {e.sweep for e in extensions}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtensionConfig:
+    """Knobs shared by the engine's sweeps."""
+
+    mc_samples: int = 1          # C̃ for the MC factorization (paper Eq. 20)
+    class_chunk: Optional[int] = None  # chunk size over C for exact factors
+    # When True, first-order moment formulas route through the Pallas kernels
+    # in repro.kernels (interpret=True on CPU); pure-jnp einsums otherwise.
+    use_kernels: bool = False

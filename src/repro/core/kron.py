@@ -1,0 +1,70 @@
+"""Kronecker-factor algebra: π-damped inverses (paper App. C.3, Eq. 28/29).
+
+A Kronecker-factored curvature block is ``G ≈ A ⊗ B`` with ``A`` an
+input-side ``[a×a]`` factor (possibly diagonal, stored as a vector — the
+embedding case) and ``B`` an output-side ``[b×b]`` factor.
+
+``(A ⊗ B + (λ+η) I)⁻¹`` is approximated per Martens & Grosse (2015):
+
+    (A + π √(λ+η) I)⁻¹ ⊗ (B + (1/π) √(λ+η) I)⁻¹,
+    π = sqrt( (tr A / dim A) / (tr B / dim B) ).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pi_factor(A, B):
+    """Trace-norm π (Eq. 29). A may be a vector (diagonal factor)."""
+    tr_a = jnp.sum(A) if A.ndim == 1 else jnp.trace(A)
+    dim_a = A.shape[0]
+    tr_b = jnp.trace(B)
+    dim_b = B.shape[0]
+    num = tr_a * dim_b
+    den = dim_a * tr_b
+    return jnp.sqrt(jnp.maximum(num, 1e-30) / jnp.maximum(den, 1e-30))
+
+
+def damped_inverses(A, B, damping):
+    """Return callables' data: inverted damped factors (Eq. 28)."""
+    pi = pi_factor(A, B)
+    sd = jnp.sqrt(damping)
+    if A.ndim == 1:
+        A_inv = 1.0 / (A + pi * sd)
+    else:
+        A_inv = jnp.linalg.inv(A + pi * sd * jnp.eye(A.shape[0], dtype=A.dtype))
+    B_inv = jnp.linalg.inv(B + (sd / pi) * jnp.eye(B.shape[0], dtype=B.dtype))
+    return A_inv, B_inv
+
+
+def kron_solve(A, B, g, damping):
+    """(A⊗B + λI)⁻¹ vec(g) for g of shape [a, b] (weight-matrix layout)."""
+    A_inv, B_inv = damped_inverses(A, B, damping)
+    g32 = g.astype(jnp.float32)
+    if A.ndim == 1:
+        return (A_inv[:, None] * g32) @ B_inv.T
+    return A_inv @ g32 @ B_inv.T
+
+
+def kron_solve_bias(B, g, damping):
+    """Bias blocks carry only the B factor (paper footnote 7/8)."""
+    B_inv = jnp.linalg.inv(
+        B + damping * jnp.eye(B.shape[0], dtype=B.dtype)
+    )
+    return B_inv @ g.astype(jnp.float32)
+
+
+def kron_mat_vec(A, B, g):
+    """(A ⊗ B) vec(g) in weight-matrix layout."""
+    g32 = g.astype(jnp.float32)
+    if A.ndim == 1:
+        return (A[:, None] * g32) @ B.T
+    return A @ g32 @ B.T
+
+
+def kron_dense(A, B):
+    """Materialize A ⊗ B (tests only)."""
+    if A.ndim == 1:
+        A = jnp.diag(A)
+    return jnp.kron(A, B)

@@ -1,0 +1,109 @@
+"""Autodiff oracles — slow, obviously-correct references for tests/benchmarks.
+
+These implement the *naive* approaches the paper compares against:
+  * per-sample gradients via ``vmap(grad)`` (and a literal python for-loop
+    for the Fig. 3 benchmark),
+  * the exact GGN via explicit Jacobians (Eq. 6),
+  * the exact Hessian diagonal via ``jax.hessian``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def loss_fn(model, loss, params, inputs, targets):
+    z = model.apply(params, inputs)
+    return loss.value(z, targets)
+
+
+def grad(model, loss, params, inputs, targets):
+    return jax.grad(lambda p: loss_fn(model, loss, p, inputs, targets))(params)
+
+
+def per_sample_grads(model, loss, params, inputs, targets):
+    """g_n = ∇ of the n-th sample's contribution to the mean loss.
+
+    Matches the paper's ``(1/N) ∇ℓ_n`` convention: the returned gradients
+    sum (over n) to the batch gradient.
+    """
+    n = jax.tree.leaves(inputs)[0].shape[0]
+
+    def one(inp, tgt):
+        def f(p):
+            z = model.apply(p, jax.tree.map(lambda a: a[None], inp))
+            return loss.value(z, jax.tree.map(lambda a: a[None], tgt))
+
+        return jax.grad(f)(params)
+
+    gs = jax.vmap(one)(inputs, targets)
+    return jax.tree.map(lambda g: g / float(n), gs)
+
+
+def per_sample_grads_loop(model, loss, params, inputs, targets):
+    """Literal for-loop (the paper's Fig. 3 baseline)."""
+    n = jax.tree.leaves(inputs)[0].shape[0]
+    outs = []
+    gfun = jax.jit(
+        lambda p, inp, tgt: jax.grad(
+            lambda pp: loss_fn(model, loss, pp, inp, tgt)
+        )(p)
+    )
+    for i in range(n):
+        inp = jax.tree.map(lambda a: a[i: i + 1], inputs)
+        tgt = jax.tree.map(lambda a: a[i: i + 1], targets)
+        outs.append(jax.tree.map(lambda g: g / float(n), gfun(params, inp, tgt)))
+    return jax.tree.map(lambda *gs: jnp.stack(gs), *outs)
+
+
+def _unit_loss(loss, z, y):
+    """Loss of a single output unit, WITHOUT the 1/m mean factor."""
+    if loss.name == "cross_entropy":
+        logp = jax.nn.log_softmax(z.astype(jnp.float32))
+        return -logp[y.astype(jnp.int32)]
+    return 0.5 * jnp.sum((z.astype(jnp.float32) - y) ** 2)
+
+
+def ggn_matrix(model, loss, params, inputs, targets):
+    """Exact full GGN of the mean objective (Eq. 6). Tiny nets only.
+
+    Returns a ``[P, P]`` matrix over the raveled parameter vector.
+    """
+    flat, unravel = ravel_pytree(params)
+
+    def net(pf):
+        z = model.apply(unravel(pf), inputs)
+        return z.reshape(-1, z.shape[-1])
+
+    J = jax.jacobian(net)(flat)  # [m, C, P]
+    z = net(flat)
+    m, C, P = J.shape
+    if loss.name == "cross_entropy":
+        ys = targets.reshape(-1)
+    else:
+        ys = targets.reshape(-1, targets.shape[-1])
+    G = jnp.zeros((P, P), jnp.float32)
+    for i in range(m):
+        if loss.name == "cross_entropy" and int(ys[i]) < 0:
+            continue
+        Hi = jax.hessian(lambda zz: _unit_loss(loss, zz, ys[i]))(z[i])
+        G = G + J[i].T @ Hi.astype(jnp.float32) @ J[i]
+    return G / float(m)
+
+
+def ggn_diag(model, loss, params, inputs, targets):
+    return jnp.diag(ggn_matrix(model, loss, params, inputs, targets))
+
+
+def hessian_diag(model, loss, params, inputs, targets):
+    flat, unravel = ravel_pytree(params)
+    H = jax.hessian(
+        lambda pf: loss_fn(model, loss, unravel(pf), inputs, targets)
+    )(flat)
+    return jnp.diag(H)
+
+
+def flat_blocks(params, tree):
+    """Ravel a stats tree the same way ravel_pytree ravels params."""
+    return ravel_pytree(tree)[0]

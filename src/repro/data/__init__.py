@@ -1,0 +1,1 @@
+from repro.data.synthetic import DataConfig, audio_batch, batch_for, lm_batch, vlm_batch

@@ -1,0 +1,89 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of (seed, step, host slice): resuming after
+a failure (or on a different host layout) regenerates the exact stream with
+no iterator state to checkpoint — the data-side half of fault tolerance.
+
+The token stream is a structured Markov-ish mixture (not uniform noise) so
+losses move visibly and curvature statistics are non-degenerate:
+  next ~ (shift by a step-dependent offset) mixed with noise tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+def _fold(seed, step, salt):
+    k = jax.random.PRNGKey(seed)
+    k = jax.random.fold_in(k, step)
+    return jax.random.fold_in(k, salt)
+
+
+def lm_batch(dc: DataConfig, step: int):
+    """→ {'inputs': tokens [B_host, T], 'labels': [B_host, T]}."""
+    b_host = dc.global_batch // dc.n_hosts
+    k1 = _fold(dc.seed, step, dc.host_id * 3 + 1)
+    k2 = _fold(dc.seed, step, dc.host_id * 3 + 2)
+    base = jax.random.randint(k1, (b_host, dc.seq_len + 1), 0, dc.vocab)
+    # structured component: token_{t+1} = token_t + offset (mod V) w.p. 0.7
+    offset = (step % 17) + 1
+    shifted = (base[:, :-1] + offset) % dc.vocab
+    gate = jax.random.bernoulli(k2, 0.7, shifted.shape)
+    seq = jnp.where(gate, shifted, base[:, 1:])
+    tokens = jnp.concatenate([base[:, :1], seq], axis=1)
+    return {"inputs": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+
+def vlm_batch(dc: DataConfig, step: int, n_prefix: int, d_model: int,
+              dtype=jnp.float32):
+    b_host = dc.global_batch // dc.n_hosts
+    lm = lm_batch(
+        dataclasses.replace(dc, seq_len=dc.seq_len - n_prefix), step)
+    kp = _fold(dc.seed, step, dc.host_id * 3 + 3)
+    prefix = 0.02 * jax.random.normal(
+        kp, (b_host, n_prefix, d_model), jnp.float32).astype(dtype)
+    labels = jnp.concatenate(
+        [-jnp.ones((b_host, n_prefix), jnp.int32), lm["labels"]], axis=1)
+    return {
+        "inputs": {"tokens": lm["inputs"], "prefix": prefix},
+        "labels": labels,
+    }
+
+
+def audio_batch(dc: DataConfig, step: int, dec_len: int, d_model: int,
+                dtype=jnp.float32):
+    b_host = dc.global_batch // dc.n_hosts
+    kf = _fold(dc.seed, step, dc.host_id * 3 + 4)
+    frames = 0.02 * jax.random.normal(
+        kf, (b_host, dc.seq_len, d_model), jnp.float32).astype(dtype)
+    lm = lm_batch(dataclasses.replace(dc, seq_len=dec_len), step)
+    return {
+        "inputs": {"frames": frames, "tokens": lm["inputs"]},
+        "labels": lm["labels"],
+    }
+
+
+def batch_for(cfg, shape_or_dc, step, seed=0, batch=None):
+    """Arch-aware batch builder from a ModelConfig + Shape."""
+    seq = shape_or_dc.seq_len
+    b = batch or shape_or_dc.global_batch
+    dc = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=b, seed=seed)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.kind == "encdec":
+        return audio_batch(dc, step, cfg.dec_len, cfg.d_model, dt)
+    if cfg.frontend == "vision":
+        return vlm_batch(dc, step, cfg.n_prefix, cfg.d_model, dt)
+    return lm_batch(dc, step)

@@ -1,0 +1,7 @@
+from repro.distributed.compress import (
+    compress_with_ef,
+    decompress,
+    init_error_feedback,
+)
+from repro.distributed.dp_step import init_ef_sharded, make_compressed_dp_step
+from repro.distributed.kfac_dist import compress_factors, shard_factor_inverses

@@ -1,0 +1,31 @@
+"""Gradient compression with error feedback (1-bit-Adam-style, bf16 here).
+
+``compress``/``decompress`` + residual carry: the quantization error of
+step t is added back into step t+1's gradient before compressing, so the
+*accumulated* update is unbiased (Karimireddy et al., 2019).  Used by the
+explicit-DP step (`dp_step.py`) around its psum, and by the distributed
+KFAC factor sync.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_ef(grads, ef):
+    """→ (compressed bf16 grads, new error-feedback residuals)."""
+    comp = jax.tree.map(
+        lambda g, e: (g.astype(jnp.float32) + e).astype(jnp.bfloat16),
+        grads, ef)
+    new_ef = jax.tree.map(
+        lambda g, e, q: g.astype(jnp.float32) + e - q.astype(jnp.float32),
+        grads, ef, comp)
+    return comp, new_ef
+
+
+def decompress(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)

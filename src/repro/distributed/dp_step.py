@@ -1,0 +1,67 @@
+"""Explicit data-parallel step via shard_map: compressed all-reduce with
+error feedback.
+
+The implicit-SPMD path (jit + sharded batch) reduces gradients in f32
+inside XLA's backward — there is no seam to compress at.  This step makes
+the DP reduction *explicit*: per-shard gradients are computed locally,
+compressed to bf16 with a per-shard error-feedback residual, psum'd over
+the data axes, and decompressed — halving the dominant DP collective's
+bytes while the accumulated update stays unbiased (error feedback,
+Karimireddy et al. 2019).
+
+Scope: pure-DP over ('data',) / ('pod','data'); TP-sharded params use the
+implicit path (their activation collectives are latency-bound, not
+bandwidth-bound).  The error-feedback tree carries a leading shard axis
+([D, *param_shape]) so each data shard keeps its own residual.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.distributed.compress import compress_with_ef
+from repro.optim.optimizers import apply_updates
+
+
+def init_ef_sharded(params, n_shards):
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_shards,) + p.shape, jnp.float32), params)
+
+
+def make_compressed_dp_step(model, loss, opt, mesh, data_axes=("data",)):
+    n_shards = 1
+    for ax in data_axes:
+        n_shards *= mesh.shape[ax]
+    batch_spec = jax.tree.map(lambda _: P(data_axes), {"inputs": 0, "labels": 0})
+
+    def shard_body(params, ef, batch):
+        def loss_fn(p):
+            z = model.apply(p, batch["inputs"])
+            return loss.value(z, batch["labels"])
+
+        lv, g = jax.value_and_grad(loss_fn)(params)
+        ef_local = jax.tree.map(lambda e: e[0], ef)
+        comp, new_ef = compress_with_ef(g, ef_local)
+        summed = jax.tree.map(lambda c: jax.lax.psum(c, data_axes), comp)
+        g_avg = jax.tree.map(
+            lambda s: s.astype(jnp.float32) / n_shards, summed)
+        lv = jax.lax.pmean(lv, data_axes)
+        new_ef = jax.tree.map(lambda e: e[None], new_ef)
+        return lv, g_avg, new_ef
+
+    smapped = shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(P(), jax.tree.map(lambda _: P(data_axes), 0), batch_spec),
+        out_specs=(P(), P(), jax.tree.map(lambda _: P(data_axes), 0)),
+        check_rep=False,
+    )
+
+    def step(params, opt_state, ef, batch):
+        lv, g_avg, new_ef = smapped(params, ef, batch)
+        ups, opt_state = opt.update(g_avg, opt_state, params)
+        params = apply_updates(params, ups)
+        return params, opt_state, new_ef, lv
+
+    return step

@@ -1,0 +1,46 @@
+"""Distributed K-FAC plumbing (Tsuji et al. 2019 / Osawa et al. style).
+
+Under implicit SPMD the Kronecker factors computed by the engine are
+already batch-global (the data-axis reduction is fused into the stats
+einsums).  What remains distributed-specific:
+
+  * ``shard_factor_inverses`` — the L per-layer factor inversions are
+    embarrassingly parallel; constraining the stacked [L, a, a] factors to
+    be sharded over the *data* axis makes each data shard invert L/D of
+    them (round-robin inversion), after which the preconditioned updates
+    are re-gathered by XLA.  The model axis is left alone — it is busy with
+    TP activations.
+  * ``compress_factors`` — factors are synced in bf16 (they are curvature
+    *statistics*; EMA smoothing in the optimizer absorbs the rounding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.module import is_axes
+
+
+def shard_factor_inverses(curv_tree, mesh, axis="data"):
+    """Apply a sharding constraint over the leading (layer-stack) axis of
+    every stacked Kronecker factor so inversions are distributed."""
+    size = mesh.shape[axis]
+
+    def constrain(leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim < 3:
+            return leaf
+        if leaf.shape[0] % size != 0:
+            return leaf
+        spec = P(axis, *([None] * (leaf.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+
+    return jax.tree.map(constrain, curv_tree)
+
+
+def compress_factors(curv_tree):
+    return jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16).astype(jnp.float32)
+        if hasattr(x, "astype") else x,
+        curv_tree)

@@ -1,0 +1,4 @@
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.wkv import wkv_pallas
+from repro.kernels.ops import batch_l2, ggn_diag, per_sample_moment, sq_matmul

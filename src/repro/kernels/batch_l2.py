@@ -1,0 +1,60 @@
+"""Per-sample gradient L2 norms via the Gram trick, fused.
+
+l2[n] = Σ_{r,s} (A_n A_nᵀ)[r,s] · (B_n B_nᵀ)[r,s]
+      = ‖Σ_r a_r b_rᵀ‖²   (Goodfellow 2015; paper App. A.1)
+
+Cost O(N·R²·(a+b)) instead of O(N·R·a·b) — the win when R ≪ a·b/(a+b)
+(short sequences / wide layers).  The two [br×bs] Gram tiles live in VMEM;
+their elementwise product is reduced on the fly — neither Gram matrix is
+ever materialized in HBM.
+
+Tiling: grid (N, r/br, s/bs); output [N, 1] accumulates across (r, s) tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a1_ref, b1_ref, a2_ref, b2_ref, o_ref):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a1 = a1_ref[0].astype(jnp.float32)  # [br, a]
+    a2 = a2_ref[0].astype(jnp.float32)  # [bs, a]
+    b1 = b1_ref[0].astype(jnp.float32)  # [br, b]
+    b2 = b2_ref[0].astype(jnp.float32)  # [bs, b]
+    ga = jax.lax.dot_general(a1, a2, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    gb = jax.lax.dot_general(b1, b2, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    o_ref[0, 0] += jnp.sum(ga * gb)
+
+
+def batch_l2_pallas(A, B, *, block_r=128, interpret=True):
+    """A: [N, R, a], B: [N, R, b] → [N] float32."""
+    n, r, a = A.shape
+    b = B.shape[-1]
+    grid = (n, pl.cdiv(r, block_r), pl.cdiv(r, block_r))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_r, a), lambda k, i, j: (k, i, 0)),
+            pl.BlockSpec((1, block_r, b), lambda k, i, j: (k, i, 0)),
+            pl.BlockSpec((1, block_r, a), lambda k, i, j: (k, j, 0)),
+            pl.BlockSpec((1, block_r, b), lambda k, i, j: (k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda k, i, j: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary",
+                                             "arbitrary"))
+        ) if not interpret else {},
+        interpret=interpret,
+    )(A, B, A, B)
+    return out[:, 0]

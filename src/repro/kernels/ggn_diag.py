@@ -1,0 +1,52 @@
+"""Exact GGN diagonal from backpropagated factors, class-chunk fused.
+
+diag[a,b] = Σ_{c,n} (Σ_r A[n,r,a] S[c,n,r,b])²      (paper Eq. 19)
+
+The jnp path must broadcast A over the factor axis ([C·N, R, a] copies);
+here the index map reuses the same A block for every c — zero duplication
+in HBM, and the [ba×bb] contribution tile is squared/accumulated in VMEM.
+
+Tiling: grid (a/ba, b/bb, N·C) with n = k // C, c = k % C.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, s_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[0].astype(jnp.float32)     # [R, ba]
+    s = s_ref[0, 0].astype(jnp.float32)  # [R, bb]
+    t = jax.lax.dot_general(a, s, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[...] += t * t
+
+
+def ggn_diag_pallas(A, S, *, block_a=128, block_b=128, interpret=True):
+    """A: [N, R, a]; S: [C, N, R, b] → [a, b] float32."""
+    c, n, r, b = S.shape
+    a = A.shape[-1]
+    grid = (pl.cdiv(a, block_a), pl.cdiv(b, block_b), n * c)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, r, block_a), lambda i, j, k: (k // c, 0, i)),
+            pl.BlockSpec((1, 1, r, block_b),
+                         lambda i, j, k: (k % c, k // c, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_a, block_b), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, b), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel",
+                                             "arbitrary"))
+        ) if not interpret else {},
+        interpret=interpret,
+    )(A, S)

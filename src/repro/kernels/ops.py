@@ -1,0 +1,74 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles zero-padding to block multiples (zeros contribute nothing to any of
+the four reductions, so padding is exact) and backend selection:
+``interpret=True`` on CPU (kernel body executed in Python — correctness
+path for this container), compiled Mosaic on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batch_l2 import batch_l2_pallas
+from repro.kernels.ggn_diag import ggn_diag_pallas
+from repro.kernels.per_sample_moment import per_sample_moment_pallas
+from repro.kernels.sq_matmul import sq_matmul_pallas
+
+
+def _interpret():
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("block_a", "block_b", "block_n"))
+def sq_matmul(A, B, block_a=128, block_b=128, block_n=256):
+    a, b = A.shape[1], B.shape[1]
+    ba, bb = min(block_a, max(a, 8)), min(block_b, max(b, 8))
+    A2 = _pad_to(_pad_to(A, 1, ba), 0, 8)
+    B2 = _pad_to(_pad_to(B, 1, bb), 0, 8)
+    bn = min(block_n, A2.shape[0])
+    out = sq_matmul_pallas(A2, B2, block_a=ba, block_b=bb, block_n=bn,
+                           interpret=_interpret())
+    return out[:a, :b]
+
+
+@partial(jax.jit, static_argnames=("block_a", "block_b"))
+def per_sample_moment(A, B, block_a=128, block_b=128):
+    a, b = A.shape[-1], B.shape[-1]
+    ba, bb = min(block_a, max(a, 8)), min(block_b, max(b, 8))
+    A2 = _pad_to(_pad_to(A, 2, ba), 1, 8)
+    B2 = _pad_to(_pad_to(B, 2, bb), 1, 8)
+    out = per_sample_moment_pallas(A2, B2, block_a=ba, block_b=bb,
+                                   interpret=_interpret())
+    return out[:a, :b]
+
+
+@partial(jax.jit, static_argnames=("block_r",))
+def batch_l2(A, B, block_r=128):
+    r = A.shape[1]
+    br = min(block_r, max(r, 8))
+    A2 = _pad_to(A, 1, br)
+    B2 = _pad_to(B, 1, br)
+    return batch_l2_pallas(A2, B2, block_r=br, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_a", "block_b"))
+def ggn_diag(A, S, block_a=128, block_b=128):
+    a, b = A.shape[-1], S.shape[-1]
+    ba, bb = min(block_a, max(a, 8)), min(block_b, max(b, 8))
+    A2 = _pad_to(_pad_to(A, 2, ba), 1, 8)
+    S2 = _pad_to(_pad_to(S, 3, bb), 2, 8)
+    out = ggn_diag_pallas(A2, S2, block_a=ba, block_b=bb,
+                          interpret=_interpret())
+    return out[:a, :b]

@@ -1,0 +1,56 @@
+"""Per-sequence gradient second moment, fused: M = Σ_n (A_nᵀ B_n)∘².
+
+The [N, a, b] per-sample gradient tensor NEVER exists in HBM: one [ba×bb]
+VMEM tile of sample n's gradient is formed on the MXU, squared in VREGs and
+accumulated.  This is the TPU-native form of the paper's memory argument
+(§2.2: "expensive in memory: O(ND) is prohibitive") — the sum over the
+sequence axis inside the square is what rules out the simple (A²)ᵀ(B²)
+factorization for sequence models.
+
+Tiling: grid (a/ba, b/bb, N); per step the kernel loads A[n]: [R, ba] and
+B[n]: [R, bb] (R = sequence axis, padded to a lane multiple), computes the
+[ba×bb] tile, squares, accumulates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[0].astype(jnp.float32)  # [R, ba]
+    b = b_ref[0].astype(jnp.float32)  # [R, bb]
+    g = jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] += g * g
+
+
+def per_sample_moment_pallas(A, B, *, block_a=128, block_b=128,
+                             interpret=True):
+    """A: [N, R, a], B: [N, R, b] → [a, b] float32."""
+    n, r, a = A.shape
+    b = B.shape[-1]
+    grid = (pl.cdiv(a, block_a), pl.cdiv(b, block_b), n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, r, block_a), lambda i, j, k: (k, 0, i)),
+            pl.BlockSpec((1, r, block_b), lambda i, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_a, block_b), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, b), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel",
+                                             "arbitrary"))
+        ) if not interpret else {},
+        interpret=interpret,
+    )(A, B)

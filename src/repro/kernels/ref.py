@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sq_matmul(A, B):
+    """C[a,b] = Σ_n A²[n,a] B²[n,b] — the paper's (A∘A)ᵀ(B∘B) (App. A.1)."""
+    Af, Bf = A.astype(jnp.float32), B.astype(jnp.float32)
+    return (Af * Af).T @ (Bf * Bf)
+
+
+def per_sample_moment(A, B):
+    """M[a,b] = Σ_n (Σ_r A[n,r,a] B[n,r,b])² — sequence 2nd moment."""
+    Af, Bf = A.astype(jnp.float32), B.astype(jnp.float32)
+    g = jnp.einsum("nra,nrb->nab", Af, Bf)
+    return jnp.sum(g * g, axis=0)
+
+
+def batch_l2(A, B):
+    """l2[n] = Σ_rs (A_n A_nᵀ)[r,s] (B_n B_nᵀ)[r,s] — Gram trick."""
+    Af, Bf = A.astype(jnp.float32), B.astype(jnp.float32)
+    ga = jnp.einsum("nra,nsa->nrs", Af, Af)
+    gb = jnp.einsum("nrb,nsb->nrs", Bf, Bf)
+    return jnp.sum(ga * gb, axis=(1, 2))
+
+
+def ggn_diag(A, S):
+    """diag[a,b] = Σ_{c,n} (Σ_r A[n,r,a] S[c,n,r,b])² (Eq. 19/22)."""
+    Af, Sf = A.astype(jnp.float32), S.astype(jnp.float32)
+    t = jnp.einsum("nra,cnrb->cnab", Af, Sf)
+    return jnp.sum(t * t, axis=(0, 1))

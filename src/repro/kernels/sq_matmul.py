@@ -1,0 +1,54 @@
+"""Fused (A∘A)ᵀ(B∘B) Pallas kernel.
+
+The paper's App. A.1 second-moment trick for rank-1-per-sample layers.
+Fusing the elementwise squares into the matmul avoids materializing A², B²
+in HBM — on TPU the squares happen in VREGs on the way into the MXU.
+
+Tiling: grid (a/ba, b/bb, n/bn); the output tile [ba×bb] lives in VMEM and
+accumulates across the (innermost) n steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        a * a, b * b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def sq_matmul_pallas(A, B, *, block_a=128, block_b=128, block_n=256,
+                     interpret=True):
+    """A: [N, a], B: [N, b] → [a, b] float32."""
+    n, a = A.shape
+    b = B.shape[1]
+    grid = (pl.cdiv(a, block_a), pl.cdiv(b, block_b), pl.cdiv(n, block_n))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_a), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_n, block_b), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_a, block_b), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a, b), jnp.float32),
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel",
+                                             "arbitrary"))
+        ) if not interpret else {},
+        interpret=interpret,
+    )(A, B)

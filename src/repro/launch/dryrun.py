@@ -1,0 +1,232 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the real step function (train / prefill / decode)
+with full parameter, optimizer-state, batch and KV-cache shardings, runs
+``jax.jit(...).lower(...).compile()`` against the production mesh, and
+records ``memory_analysis`` / ``cost_analysis`` / collective-bytes into a
+JSON artifact consumed by the §Roofline table.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh single,multi [--opts remat,zero1,seqshard] [--curvature mc]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as _np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs, supported_shapes
+from repro.core import CrossEntropyLoss
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.roofline import model_flops_per_device, roofline
+from repro.nn.models import build_model
+from repro.optim import adamw
+from repro.sharding import input_shardings, partition_specs, rules_for
+from repro.train.step import make_decode_step, make_prefill_step, make_train_step
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "benchmarks", "artifacts")
+
+
+def _mem_dict(ma):
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: int(getattr(ma, k, 0)) for k in keys}
+
+
+def opt_shardings(p_shards, mesh, zero1=False):
+    """AdamW state: m/v mirror params; ZeRO-1 additionally shards them on
+    the data axis (first shardable dim not already data-sharded)."""
+    def z1(ns):
+        if not zero1:
+            return ns
+        spec = list(ns.spec) if ns.spec else []
+        # find a replicated dim to shard over data
+        for i, s in enumerate(spec):
+            if s is None:
+                spec[i] = "data"
+                return NamedSharding(mesh, P(*spec))
+        return ns
+
+    mv = jax.tree.map(z1, p_shards)
+    return {"m": mv, "v": mv, "t": NamedSharding(mesh, P())}
+
+
+def run_cell(cfg, shape, mesh, multi_pod, opts, curvature=None):
+    t0 = time.time()
+    use_remat = "remat" in opts
+    seq_shard = "seqshard" in opts
+    mode = "long" if shape.name == "long_500k" else "std"
+    rules = rules_for(mode, multi_pod)
+    seq_sh = None
+    if seq_shard:
+        seq_sh = NamedSharding(mesh, P(rules.get("batch"), "model"))
+    wkv_chunk = 16
+    for o in opts:
+        if o.startswith("wkv"):
+            wkv_chunk = int(o[3:])
+    model = build_model(cfg, remat=use_remat, seq_constraint=seq_sh,
+                        attn_impl="chunked" if "chunkattn" in opts else "naive",
+                        wkv_chunk=wkv_chunk)
+    loss = CrossEntropyLoss()
+    kind, specs = input_specs(cfg, shape, model=model)
+    params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shards = partition_specs(model.param_axes(), params_spec, rules, mesh)
+    in_sh = input_shardings(kind, specs, rules, mesh)
+
+    if kind == "train":
+        opt = adamw(3e-4, weight_decay=0.1)
+        opt_spec = jax.eval_shape(opt.init, params_spec)
+        o_shards = opt_shardings(p_shards, mesh, zero1="zero1" in opts)
+        if curvature:
+            from repro.core import DiagGGNMC, ExtensionConfig, KFAC
+            from repro.optim import curvature_optimizer
+            from repro.train.step import make_extended_train_step
+
+            exts = (KFAC,) if curvature == "kfac" else (DiagGGNMC,)
+            copt = curvature_optimizer(1e-3, curvature=exts[0].name)
+            copt_spec = jax.eval_shape(copt.init, params_spec)
+            step = make_extended_train_step(model, loss, copt, exts,
+                                            ExtensionConfig(mc_samples=1))
+            args = (params_spec, copt_spec, specs,
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+            shardings = (p_shards, NamedSharding(mesh, P()), in_sh,
+                         NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+            fn = jax.jit(step, in_shardings=shardings)
+            lowered = fn.lower(*args)
+        else:
+            mb = 1
+            for o in opts:
+                if o.startswith("mb") and o[2:].isdigit():
+                    mb = int(o[2:])
+            step = make_train_step(
+                model, loss, opt, microbatch=mb,
+                grad_dtype=jnp.bfloat16 if "gbf16" in opts else None)
+            args = (params_spec, opt_spec, specs,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            shardings = (p_shards, o_shards, in_sh, NamedSharding(mesh, P()))
+            fn = jax.jit(step, in_shardings=shardings,
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(*args)
+    elif kind == "prefill":
+        step = make_prefill_step(model)
+        fn = jax.jit(step, in_shardings=(p_shards, in_sh["inputs"]))
+        lowered = fn.lower(params_spec, specs["inputs"])
+    else:  # decode
+        step = make_decode_step(model)
+        cache_sh = partition_specs(model.cache_axes(), specs["caches"],
+                                   rules, mesh)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shards, cache_sh, in_sh["tokens"], in_sh["pos"]),
+            donate_argnums=(1,),
+        )
+        lowered = fn.lower(params_spec, specs["caches"], specs["tokens"],
+                           specs["pos"])
+
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    fused = frozenset({"flashk", "flashq", "wkvchunk"}) \
+        if "kernelize" in opts else frozenset()
+    weighted = hlo_analyze(hlo, fused_scopes=fused)
+    n_chips = int(mesh.devices.size)
+    n_params = sum(
+        int(_np.prod(l.shape)) if l.shape else 1
+        for l in jax.tree.leaves(params_spec)
+    )
+    active = cfg.active_param_count(model) if cfg.n_experts else n_params
+    mflops = model_flops_per_device(cfg, shape, n_chips, n_params, active)
+    terms = roofline(weighted, n_chips, mflops)
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": kind,
+        "mesh": "multi" if multi_pod else "single",
+        "opts": sorted(opts),
+        "curvature": curvature,
+        "n_chips": n_chips,
+        "n_params": n_params,
+        "n_params_active": active,
+        "cost_raw": {k: float(v) for k, v in cost.items()
+                     if k in ("flops", "bytes accessed", "transcendentals")},
+        "memory": _mem_dict(ma),
+        "collectives": weighted["collectives"],
+        "roofline": terms,
+        "compile_s": round(time.time() - t0, 1),
+        "hlo_bytes": len(hlo),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--opts", default="")
+    ap.add_argument("--curvature", default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else args.arch.split(",")
+    opts = set(o for o in args.opts.split(",") if o)
+    out_path = args.out or os.path.abspath(
+        os.path.join(ARTIFACT, f"dryrun_{args.tag}.json"))
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+
+    for mesh_name in args.mesh.split(","):
+        multi = mesh_name == "multi"
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = (supported_shapes(cfg) if args.shape == "all"
+                      else [SHAPES[s] for s in args.shape.split(",")
+                            if SHAPES[s] in supported_shapes(cfg)])
+            for shape in shapes:
+                key = f"{arch}|{shape.name}|{mesh_name}"
+                if key in results and not args.force:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[cell] {key} ...", flush=True)
+                try:
+                    rec = run_cell(cfg, shape, mesh, multi, opts,
+                                   args.curvature)
+                    results[key] = rec
+                    r = rec["roofline"]
+                    print(f"  ok compile={rec['compile_s']}s "
+                          f"comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+                          f"coll={r['collective_s']:.3e}s dom={r['dominant']}",
+                          flush=True)
+                except Exception as e:
+                    results[key] = {"error": f"{type(e).__name__}: {e}"}
+                    print(f"  FAIL {type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1, sort_keys=True)
+    n_ok = sum(1 for v in results.values() if "error" not in v)
+    print(f"done: {n_ok}/{len(results)} cells ok -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

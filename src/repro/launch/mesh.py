@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model) — DP across the
+pod axis rides DCN; model parallelism stays inside the pod's ICI domain.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+# v5e-class hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW_PER_LINK = 50e9       # B/s, ~4 links/chip in a 2D torus
+ICI_LINKS = 4
+HBM_BYTES = 16 * 2 ** 30     # v5e HBM capacity

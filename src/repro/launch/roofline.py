@@ -1,0 +1,65 @@
+"""Roofline-term computation from compiled dry-run artifacts.
+
+All inputs are PER-DEVICE quantities from the trip-count-weighted HLO walk
+(`hlo_cost.analyze`, post-SPMD shapes):
+
+  compute term    = flops_per_dev / 197e12        (bf16 peak, v5e class)
+  memory term     = bytes_per_dev / 819e9         (HBM bandwidth)
+  collective term = coll_bytes_per_dev / (4 × 50e9)  (ICI links)
+
+The raw ``compiled.cost_analysis()`` numbers are recorded alongside but NOT
+used for the terms: XLA's analysis counts while-loop bodies once
+(verified), so it underreports scan-stacked models by ~L×.
+
+MODEL_FLOPS (6·N·D, or 6·N_active·D for MoE) is attached per cell so the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs is visible — it catches
+remat/recompute waste and padding overhead.
+"""
+from __future__ import annotations
+
+from repro.launch import mesh as hw
+
+
+def roofline(weighted: dict, n_chips: int, model_flops_per_dev: float = 0.0):
+    flops = float(weighted.get("flops", 0.0))
+    bytes_ = float(weighted.get("bytes", 0.0))
+    coll_bytes = float(sum(weighted.get("collectives", {}).values()))
+    t_comp = flops / hw.PEAK_FLOPS_BF16
+    t_mem = bytes_ / hw.HBM_BW
+    t_coll = coll_bytes / (hw.ICI_LINKS * hw.ICI_BW_PER_LINK)
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    total = max(t_comp, t_mem, t_coll)
+    out = dict(terms)
+    out["dominant"] = dom
+    out["flops_per_dev"] = flops
+    out["bytes_per_dev"] = bytes_
+    out["coll_bytes_per_dev"] = coll_bytes
+    if model_flops_per_dev:
+        out["model_flops_per_dev"] = model_flops_per_dev
+        out["useful_compute_ratio"] = (
+            model_flops_per_dev / flops if flops else 0.0
+        )
+        # fraction of the compute roofline actually achieved if the step ran
+        # at the modeled time 'total'
+        out["roofline_fraction"] = (
+            (model_flops_per_dev / hw.PEAK_FLOPS_BF16) / total if total else 0.0
+        )
+    return out
+
+
+def model_flops_per_device(cfg, shape, n_chips, params, active_params):
+    """6·N·D rule: training does fwd+bwd (6), prefill 2, decode 2 per token."""
+    if shape.kind == "train":
+        mult = 6.0
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.kind == "encdec":
+            tokens = shape.global_batch * (shape.seq_len + cfg.dec_len)
+    elif shape.kind == "prefill":
+        mult = 2.0
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode: one token per sequence per step
+        mult = 2.0
+        tokens = shape.global_batch
+    n = active_params if active_params else params
+    return mult * n * tokens / n_chips

@@ -1,0 +1,67 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --steps 200 --seq 64 --batch 8 --optimizer kfac --ckpt /tmp/ckpt
+
+Runs the reduced config on CPU; on a real pod the same entry point runs the
+full config with the production mesh (--full --mesh single|multi).
+"""
+import argparse
+import dataclasses
+
+from repro.configs import SHAPES, get_config
+from repro.core import DiagGGNMC, ExtensionConfig, KFAC, Variance
+from repro.nn.models import build_model
+from repro.optim import adamw, curvature_optimizer, momentum_sgd
+from repro.train.loop import LoopConfig, fit
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "momentum", "diag_ggn_mc", "kfac"])
+    ap.add_argument("--damping", type=float, default=1e-1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (pod-scale; not for CPU)")
+    ap.add_argument("--track-variance", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=args.seq,
+                                global_batch=args.batch)
+
+    extensions, ext_cfg, track = (), None, ()
+    if args.optimizer == "adamw":
+        opt = adamw(args.lr or 1e-3)
+    elif args.optimizer == "momentum":
+        opt = momentum_sgd(args.lr or 1e-2)
+    elif args.optimizer == "diag_ggn_mc":
+        opt = curvature_optimizer(args.lr or 0.2, args.damping, "diag_ggn_mc")
+        extensions, ext_cfg = (DiagGGNMC,), ExtensionConfig(mc_samples=1)
+    else:
+        opt = curvature_optimizer(args.lr or 0.3, args.damping, "kfac",
+                                  stat_decay=0.9)
+        extensions, ext_cfg = (KFAC,), ExtensionConfig(mc_samples=1)
+    if args.track_variance:
+        extensions = tuple(extensions) + (Variance,)
+        track = ("variance",)
+
+    loop = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt, log_every=10)
+    _, _, hist, wd = fit(model, cfg, shape, opt, loop, extensions=extensions,
+                         ext_cfg=ext_cfg, resume=args.resume, track=track)
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(stragglers flagged: {len(wd.straggler_steps)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+from repro.nn import functional
+from repro.nn.blocks import (
+    AttnBlock,
+    AttnMoEBlock,
+    DecBlock,
+    EncBlock,
+    HymbaBlock,
+    MLAMoEBlock,
+    RWKV6Block,
+)
+from repro.nn.layers import (
+    BatchedDense,
+    Buffer,
+    Conv2d,
+    Flatten,
+    MaxPool2d,
+    Param,
+)
+from repro.nn.models import (
+    CausalLM,
+    PrefixEmbed,
+    TokenEmbed,
+    WhisperModel,
+    build_model,
+)
+from repro.nn.wired import Wired

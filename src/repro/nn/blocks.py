@@ -1,0 +1,576 @@
+"""Transformer-family blocks as ``Wired`` modules.
+
+One block = one decoder layer (attention/mixer + FFN + norms), so a layer
+stack is a single homogeneous ``ScanStack``.  Heterogeneous attention
+patterns (gemma3's 5 local : 1 global, hymba's 3 global layers) are built as
+*nested* stacks of homogeneous segments — windows stay static per block
+instance, caches get static shapes, and compile time stays O(#distinct
+block types), not O(L).
+
+Every parameter lives in a Dense / BatchedDense / Embedding / norm / Param
+child, so BackPACK extension statistics come from the hand-written child
+formulas; the mixing dataflow in ``wire`` is differentiated by the Wired
+VJP taps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.module import Dense, GroupRMSNorm, LayerNorm, Module, RMSNorm
+from repro.nn import functional as F
+from repro.nn.layers import BatchedDense, Param
+from repro.nn.wired import Wired
+
+
+def _norm(kind, d, dtype):
+    return RMSNorm(d, dtype=dtype) if kind == "rmsnorm" else LayerNorm(d, dtype=dtype)
+
+
+def _act(name):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# dense attention + (G)LU FFN decoder layer
+# ---------------------------------------------------------------------------
+
+
+class AttnBlock(Wired):
+    def __init__(self, d, n_heads, kv_heads, d_ff, *, head_dim=None,
+                 causal=True, window=None, norm="rmsnorm", act="silu",
+                 glu=True, rope_theta=10000.0, rope_pct=1.0, qkv_bias=False,
+                 attn_impl="naive", dtype=jnp.float32):
+        self.d, self.h, self.kv = d, n_heads, kv_heads
+        self.dh = head_dim or d // n_heads
+        self.causal, self.window = causal, window
+        self.attn_impl = attn_impl
+        self.act = _act(act)
+        self.glu = glu
+        self.rope_theta, self.rope_pct = rope_theta, rope_pct
+        self.dtype = dtype
+        dh = self.dh
+        ch = {
+            "ln1": _norm(norm, d, dtype),
+            "wq": Dense(d, n_heads * dh, use_bias=qkv_bias, dtype=dtype,
+                        axes=("embed", "heads")),
+            "wk": Dense(d, kv_heads * dh, use_bias=qkv_bias, dtype=dtype,
+                        axes=("embed", "kv")),
+            "wv": Dense(d, kv_heads * dh, use_bias=qkv_bias, dtype=dtype,
+                        axes=("embed", "kv")),
+            "wo": Dense(n_heads * dh, d, use_bias=False, dtype=dtype,
+                        axes=("heads", "embed")),
+            "ln2": _norm(norm, d, dtype),
+        }
+        if glu:
+            ch["w_gate"] = Dense(d, d_ff, use_bias=False, dtype=dtype,
+                                 axes=("embed", "mlp"))
+            ch["w_up"] = Dense(d, d_ff, use_bias=False, dtype=dtype,
+                               axes=("embed", "mlp"))
+            ch["w_down"] = Dense(d_ff, d, use_bias=False, dtype=dtype,
+                                 axes=("mlp", "embed"))
+        else:
+            ch["w_up"] = Dense(d, d_ff, use_bias=True, dtype=dtype,
+                               axes=("embed", "mlp"))
+            ch["w_down"] = Dense(d_ff, d, use_bias=True, dtype=dtype,
+                                 axes=("mlp", "embed"))
+        self.children_map = ch
+
+    def _rope(self, x, positions):
+        if self.rope_pct >= 1.0:
+            return F.apply_rope(x, positions, self.rope_theta)
+        rot = int(self.dh * self.rope_pct)
+        rot -= rot % 2
+        return jnp.concatenate(
+            [F.apply_rope(x[..., :rot], positions, self.rope_theta),
+             x[..., rot:]], axis=-1)
+
+    def _attend(self, call, x, positions, k_positions=None, kc=None, vc=None):
+        n, t = x.shape[:2]
+        q = call("wq", x).reshape(n, t, self.h, self.dh)
+        k = call("wk", x).reshape(n, t, self.kv, self.dh)
+        v = call("wv", x).reshape(n, t, self.kv, self.dh)
+        q = self._rope(q, positions)
+        k = self._rope(k, positions)
+        return q, k, v
+
+    def _ffn(self, call, x):
+        h = call("ln2", x)
+        if self.glu:
+            y = self.act(call("w_gate", h)) * call("w_up", h)
+        else:
+            y = self.act(call("w_up", h))
+        return x + call("w_down", y)
+
+    def _sdpa(self, q, k, v):
+        fn = F.sdpa_chunked if self.attn_impl == "chunked" else F.sdpa
+        return fn(q, k, v, causal=self.causal, window=self.window)
+
+    def wire(self, call, params, x):
+        n, t = x.shape[:2]
+        h = call("ln1", x)
+        q, k, v = self._attend(call, h, jnp.arange(t))
+        a = self._sdpa(q, k, v)
+        x = x + call("wo", a.reshape(n, t, self.h * self.dh))
+        return self._ffn(call, x)
+
+    # -- decode -----------------------------------------------------------------
+    def init_cache(self, params, batch, max_len, dtype):
+        S = max_len if self.window is None else min(self.window, max_len)
+        return {
+            "k": jnp.zeros((batch, S, self.kv, self.dh), dtype),
+            "v": jnp.zeros((batch, S, self.kv, self.dh), dtype),
+            "pos": -jnp.ones((S,), jnp.int32),
+        }
+
+    def cache_axes(self):
+        from repro.core.module import Axes
+        return {"k": Axes(("batch", "kv_seq", "kv", "head")),
+                "v": Axes(("batch", "kv_seq", "kv", "head")),
+                "pos": Axes(("kv_seq",))}
+
+    def wire_step(self, call, params, xp, cache):
+        x, pos = xp  # x: [N, 1, d], pos: traced scalar
+        n = x.shape[0]
+        h = call("ln1", x)
+        q, k, v = self._attend(call, h, pos)
+        ring = jnp.asarray(self.window is not None)
+        ck, cv, pbuf = F.cache_update(
+            cache["k"], cache["v"], cache["pos"], k, v, pos,
+            ring=ring,
+        )
+        a = F.sdpa(q, ck, cv, causal=True, window=self.window,
+                   q_positions=pos[None], k_positions=pbuf)
+        x = x + call("wo", a.reshape(n, 1, self.h * self.dh))
+        x = self._ffn(call, x)
+        return (x, pos), {"k": ck, "v": cv, "pos": pbuf}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) attention + MoE FFN decoder layer
+# ---------------------------------------------------------------------------
+
+
+class MLAMoEBlock(Wired):
+    def __init__(self, d, n_heads, d_expert, n_experts, top_k, *,
+                 kv_lora=512, qk_nope=128, qk_rope=64, v_dim=128,
+                 n_shared=2, capacity_factor=1.25, rope_theta=10000.0,
+                 act="silu", dtype=jnp.float32):
+        self.d, self.h = d, n_heads
+        self.kv_lora, self.nope, self.rh, self.dv = kv_lora, qk_nope, qk_rope, v_dim
+        self.E, self.k_top, self.cf = n_experts, top_k, capacity_factor
+        self.n_shared = n_shared
+        self.rope_theta = rope_theta
+        self.act = _act(act)
+        self.dtype = dtype
+        ch = {
+            "ln1": RMSNorm(d, dtype=dtype),
+            "dq": Dense(d, n_heads * (qk_nope + qk_rope), use_bias=False,
+                        dtype=dtype, axes=("embed", "heads")),
+            "dkv": Dense(d, kv_lora + qk_rope, use_bias=False, dtype=dtype,
+                         axes=("embed", None)),
+            "uk": Dense(kv_lora, n_heads * qk_nope, use_bias=False,
+                        dtype=dtype, axes=(None, "heads")),
+            "uv": Dense(kv_lora, n_heads * v_dim, use_bias=False,
+                        dtype=dtype, axes=(None, "heads")),
+            "wo": Dense(n_heads * v_dim, d, use_bias=False, dtype=dtype,
+                        axes=("heads", "embed")),
+            "ln2": RMSNorm(d, dtype=dtype),
+            "router": Dense(d, n_experts, use_bias=False, dtype=dtype,
+                            axes=("embed", None)),
+            "e_gate": BatchedDense(n_experts, d, d_expert, dtype=dtype),
+            "e_up": BatchedDense(n_experts, d, d_expert, dtype=dtype),
+            "e_down": BatchedDense(n_experts, d_expert, d, dtype=dtype,
+                                   axes=("expert", "mlp", "embed")),
+        }
+        if n_shared:
+            sd = d_expert * n_shared
+            ch["s_gate"] = Dense(d, sd, use_bias=False, dtype=dtype,
+                                 axes=("embed", "mlp"))
+            ch["s_up"] = Dense(d, sd, use_bias=False, dtype=dtype,
+                               axes=("embed", "mlp"))
+            ch["s_down"] = Dense(sd, d, use_bias=False, dtype=dtype,
+                                 axes=("mlp", "embed"))
+        self.children_map = ch
+
+    def _mla_qkv(self, call, h, positions):
+        n, t = h.shape[:2]
+        q = call("dq", h).reshape(n, t, self.h, self.nope + self.rh)
+        q_nope, q_pe = q[..., : self.nope], q[..., self.nope:]
+        q_pe = F.apply_rope(q_pe, positions, self.rope_theta)
+        ckv_full = call("dkv", h)
+        c_kv, k_pe = ckv_full[..., : self.kv_lora], ckv_full[..., self.kv_lora:]
+        k_pe = F.apply_rope(k_pe[:, :, None, :], positions, self.rope_theta)
+        return q_nope, q_pe, c_kv, k_pe  # k_pe: [N, T, 1, rh]
+
+    def _mla_attend(self, call, q_nope, q_pe, c_kv, k_pe):
+        n, t = q_nope.shape[:2]
+        k_nope = call("uk", c_kv).reshape(n, -1, self.h, self.nope)
+        v = call("uv", c_kv).reshape(n, -1, self.h, self.dv)
+        k_pe_b = jnp.broadcast_to(k_pe, k_pe.shape[:2] + (self.h, self.rh))
+        q_full = jnp.concatenate([q_nope, q_pe], -1)
+        k_full = jnp.concatenate([k_nope, k_pe_b], -1)
+        a = F.sdpa(q_full, k_full, v, causal=True,
+                   scale=(self.nope + self.rh) ** -0.5)
+        return call("wo", a.reshape(n, t, self.h * self.dv))
+
+    def _moe_ffn(self, call, x):
+        from repro.nn.moe import moe_apply
+
+        h = call("ln2", x)
+        logits = call("router", h)
+        y = moe_apply(call, h, logits, self.E, self.k_top, self.cf, self.act)
+        if self.n_shared:
+            y = y + call("s_down", self.act(call("s_gate", h)) * call("s_up", h))
+        return x + y
+
+    def wire(self, call, params, x):
+        n, t = x.shape[:2]
+        h = call("ln1", x)
+        q_nope, q_pe, c_kv, k_pe = self._mla_qkv(call, h, jnp.arange(t))
+        x = x + self._mla_attend(call, q_nope, q_pe, c_kv, k_pe)
+        return self._moe_ffn(call, x)
+
+    # -- decode: absorbed MLA over the *compressed* cache ------------------------
+    def init_cache(self, params, batch, max_len, dtype):
+        return {
+            "ckv": jnp.zeros((batch, max_len, self.kv_lora), dtype),
+            "kpe": jnp.zeros((batch, max_len, self.rh), dtype),
+            "pos": -jnp.ones((max_len,), jnp.int32),
+        }
+
+    def cache_axes(self):
+        from repro.core.module import Axes
+        return {"ckv": Axes(("batch", "kv_seq", None)),
+                "kpe": Axes(("batch", "kv_seq", None)),
+                "pos": Axes(("kv_seq",))}
+
+    def wire_step(self, call, params, xp, cache):
+        x, pos = xp
+        n = x.shape[0]
+        h = call("ln1", x)
+        q_nope, q_pe, c_kv, k_pe = self._mla_qkv(call, h, pos)
+        S = cache["ckv"].shape[1]
+        slot = jnp.minimum(pos, S - 1)
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), slot, axis=1)
+        kpe = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpe"], k_pe[:, :, 0].astype(cache["kpe"].dtype), slot, axis=1)
+        pbuf = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos[None].astype(jnp.int32), slot, axis=0)
+        # absorb W_UK into the query:  score = q_nopeᵀ W_UK c_kv + q_peᵀ k_pe
+        wuk = params["uk"]["w"].reshape(self.kv_lora, self.h, self.nope)
+        q_lat = jnp.einsum("nthd,lhd->nthl", q_nope.astype(jnp.float32),
+                           wuk.astype(jnp.float32))  # [N,1,H,kv_lora]
+        scale = (self.nope + self.rh) ** -0.5
+        logits = (jnp.einsum("nthl,nsl->nhts", q_lat, ckv.astype(jnp.float32))
+                  + jnp.einsum("nthr,nsr->nhts", q_pe.astype(jnp.float32),
+                               kpe.astype(jnp.float32))) * scale
+        mask = (pbuf >= 0) & (pbuf <= pos)  # [S]
+        logits = jnp.where(mask[None, None, None, :], logits, F.NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("nhts,nsl->nthl", p, ckv.astype(jnp.float32))
+        wuv = params["uv"]["w"].reshape(self.kv_lora, self.h, self.dv)
+        a = jnp.einsum("nthl,lhv->nthv", ctx, wuv.astype(jnp.float32))
+        x = x + call("wo", a.reshape(n, 1, self.h * self.dv).astype(x.dtype))
+        x = self._moe_ffn(call, x)
+        return (x, pos), {"ckv": ckv, "kpe": kpe, "pos": pbuf}
+
+
+# ---------------------------------------------------------------------------
+# GQA attention + MoE FFN (granite)
+# ---------------------------------------------------------------------------
+
+
+class AttnMoEBlock(AttnBlock):
+    def __init__(self, d, n_heads, kv_heads, d_expert, n_experts, top_k, *,
+                 capacity_factor=1.25, act="silu", rope_theta=10000.0,
+                 dtype=jnp.float32, head_dim=None):
+        super().__init__(d, n_heads, kv_heads, 4 * d, head_dim=head_dim,
+                         act=act, rope_theta=rope_theta, dtype=dtype)
+        # replace the dense FFN with a routed MoE
+        for k in ("w_gate", "w_up", "w_down"):
+            self.children_map.pop(k, None)
+        self.E, self.k_top, self.cf = n_experts, top_k, capacity_factor
+        self.children_map.update({
+            "router": Dense(d, n_experts, use_bias=False, dtype=dtype,
+                            axes=("embed", None)),
+            "e_gate": BatchedDense(n_experts, d, d_expert, dtype=dtype),
+            "e_up": BatchedDense(n_experts, d, d_expert, dtype=dtype),
+            "e_down": BatchedDense(n_experts, d_expert, d, dtype=dtype,
+                                   axes=("expert", "mlp", "embed")),
+        })
+
+    def _ffn(self, call, x):
+        from repro.nn.moe import moe_apply
+
+        h = call("ln2", x)
+        logits = call("router", h)
+        y = moe_apply(call, h, logits, self.E, self.k_top, self.cf, self.act)
+        return x + y
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch") block: time-mix (WKV, data-dependent decay) + channel-mix
+# ---------------------------------------------------------------------------
+
+
+class RWKV6Block(Wired):
+    def __init__(self, d, d_ff, *, head_dim=64, decay_lora=64,
+                 wkv_chunk=16, dtype=jnp.float32):
+        self.d, self.dh = d, head_dim
+        self.h = d // head_dim
+        self.wkv_chunk = wkv_chunk
+        self.dtype = dtype
+        mk = lambda: Param((d,), init=0.5, dtype=dtype)
+        self.children_map = {
+            "ln1": RMSNorm(d, dtype=dtype),
+            "ln2": RMSNorm(d, dtype=dtype),
+            "mu_r": mk(), "mu_k": mk(), "mu_v": mk(), "mu_g": mk(), "mu_w": mk(),
+            "w1": Dense(d, decay_lora, use_bias=False, dtype=dtype,
+                        axes=("embed", None)),
+            "w2": Dense(decay_lora, d, use_bias=False, dtype=dtype,
+                        axes=(None, "embed")),
+            "w0": Param((d,), init=-4.0, dtype=dtype),
+            "u": Param((self.h, head_dim), init=0.0, dtype=dtype),
+            "wr": Dense(d, d, use_bias=False, dtype=dtype, axes=("embed", "heads")),
+            "wk": Dense(d, d, use_bias=False, dtype=dtype, axes=("embed", "heads")),
+            "wv": Dense(d, d, use_bias=False, dtype=dtype, axes=("embed", "heads")),
+            "wg": Dense(d, d, use_bias=False, dtype=dtype, axes=("embed", "heads")),
+            # per-head GroupNorm (RWKV6): shard-local under head TP
+            "ln_x": GroupRMSNorm(d, self.h, dtype=dtype),
+            "wo": Dense(d, d, use_bias=False, dtype=dtype, axes=("heads", "embed")),
+            "cmu_r": mk(), "cmu_k": mk(),
+            "cwr": Dense(d, d, use_bias=False, dtype=dtype, axes=("embed", "mlp")),
+            "cwk": Dense(d, d_ff, use_bias=False, dtype=dtype, axes=("embed", "mlp")),
+            "cwv": Dense(d_ff, d, use_bias=False, dtype=dtype, axes=("mlp", "embed")),
+        }
+
+    def _time_mix(self, call, h, shifted, state0=None):
+        n, t, d = h.shape
+        lerp = lambda mu: h + (shifted - h) * call(mu, None)
+        r = call("wr", lerp("mu_r")).reshape(n, t, self.h, self.dh)
+        k = call("wk", lerp("mu_k")).reshape(n, t, self.h, self.dh)
+        v = call("wv", lerp("mu_v")).reshape(n, t, self.h, self.dh)
+        g = jax.nn.silu(call("wg", lerp("mu_g")))
+        raw = call("w0", None) + call("w2", jnp.tanh(call("w1", lerp("mu_w"))))
+        log_w = -jnp.exp(raw.astype(jnp.float32)).reshape(n, t, self.h, self.dh)
+        u = call("u", None)
+        y, state = F.wkv_chunked(r, k, v, log_w, u=u, state0=state0,
+                                 chunk=self.wkv_chunk)
+        y = call("ln_x", y.reshape(n, t, d)) * g
+        return call("wo", y), state
+
+    def _chan_mix(self, call, h, shifted):
+        lerp = lambda mu: h + (shifted - h) * call(mu, None)
+        rc = jax.nn.sigmoid(call("cwr", lerp("cmu_r")))
+        kc = jnp.square(jax.nn.relu(call("cwk", lerp("cmu_k"))))
+        return rc * call("cwv", kc)
+
+    def wire(self, call, params, x):
+        h = call("ln1", x)
+        y, _ = self._time_mix(call, h, F.token_shift(h))
+        x = x + y
+        h2 = call("ln2", x)
+        return x + self._chan_mix(call, h2, F.token_shift(h2))
+
+    def init_cache(self, params, batch, max_len, dtype):
+        return {
+            "x_time": jnp.zeros((batch, 1, self.d), dtype),
+            "x_chan": jnp.zeros((batch, 1, self.d), dtype),
+            "state": jnp.zeros((batch, self.h, self.dh, self.dh), jnp.float32),
+        }
+
+    def cache_axes(self):
+        from repro.core.module import Axes
+        return {"x_time": Axes(("batch", None, "embed")),
+                "x_chan": Axes(("batch", None, "embed")),
+                "state": Axes(("batch", "heads", None, None))}
+
+    def wire_step(self, call, params, xp, cache):
+        x, pos = xp  # [N, 1, d]
+        h = call("ln1", x)
+        y, state = self._time_mix(call, h, cache["x_time"].astype(h.dtype),
+                                  state0=cache["state"])
+        x = x + y
+        h2 = call("ln2", x)
+        x = x + self._chan_mix(call, h2, cache["x_chan"].astype(h2.dtype))
+        return (x, pos), {"x_time": h.astype(cache["x_time"].dtype),
+                          "x_chan": h2.astype(cache["x_chan"].dtype),
+                          "state": state}
+
+
+# ---------------------------------------------------------------------------
+# Hymba: parallel attention + SSD heads sharing one block
+# ---------------------------------------------------------------------------
+
+
+class HymbaBlock(AttnBlock):
+    def __init__(self, d, n_heads, kv_heads, d_ff, *, head_dim=None,
+                 ssm_state=16, window=None, act="silu", rope_theta=10000.0,
+                 attn_impl="naive", dtype=jnp.float32):
+        super().__init__(d, n_heads, kv_heads, d_ff, head_dim=head_dim,
+                         window=window, act=act, rope_theta=rope_theta,
+                         attn_impl=attn_impl, dtype=dtype)
+        self.ds = ssm_state
+        self.children_map.update({
+            "w_xs": Dense(d, self.h * self.dh, use_bias=False, dtype=dtype,
+                          axes=("embed", "heads")),
+            "w_B": Dense(d, self.h * self.ds, use_bias=False, dtype=dtype,
+                         axes=("embed", "heads")),
+            "w_C": Dense(d, self.h * self.ds, use_bias=False, dtype=dtype,
+                         axes=("embed", "heads")),
+            "w_dt": Dense(d, self.h, use_bias=True, dtype=dtype,
+                          axes=("embed", "heads")),
+            "a_log": Param((self.h,), init=0.0, dtype=jnp.float32),
+            "norm_attn": RMSNorm(self.h * self.dh, dtype=dtype),
+            "norm_ssm": RMSNorm(self.h * self.dh, dtype=dtype),
+        })
+
+    def _ssd(self, call, h, state0=None):
+        n, t = h.shape[:2]
+        xs = call("w_xs", h).reshape(n, t, self.h, self.dh)
+        B = call("w_B", h).reshape(n, t, self.h, self.ds)
+        C = call("w_C", h).reshape(n, t, self.h, self.ds)
+        dt = jax.nn.softplus(call("w_dt", h).astype(jnp.float32))
+        log_a = (-dt * jnp.exp(call("a_log", None)))[..., None]  # [N,T,H,1]
+        y, state = F.wkv_chunked(C, B, xs, log_a, u=None, state0=state0)
+        return y.reshape(n, t, self.h * self.dh), state
+
+    def wire(self, call, params, x):
+        n, t = x.shape[:2]
+        h = call("ln1", x)
+        q, k, v = self._attend(call, h, jnp.arange(t))
+        ao = self._sdpa(q, k, v)
+        ao = ao.reshape(n, t, self.h * self.dh)
+        so, _ = self._ssd(call, h)
+        y = 0.5 * (call("norm_attn", ao) + call("norm_ssm", so))
+        x = x + call("wo", y)
+        return self._ffn(call, x)
+
+    def init_cache(self, params, batch, max_len, dtype):
+        c = super().init_cache(params, batch, max_len, dtype)
+        c["ssm"] = jnp.zeros((batch, self.h, self.ds, self.dh), jnp.float32)
+        return c
+
+    def cache_axes(self):
+        c = super().cache_axes()
+        from repro.core.module import Axes
+        c["ssm"] = Axes(("batch", "heads", None, None))
+        return c
+
+    def wire_step(self, call, params, xp, cache):
+        x, pos = xp
+        n = x.shape[0]
+        h = call("ln1", x)
+        q, k, v = self._attend(call, h, pos)
+        ck, cv, pbuf = F.cache_update(
+            cache["k"], cache["v"], cache["pos"], k, v, pos,
+            ring=jnp.asarray(self.window is not None))
+        ao = F.sdpa(q, ck, cv, causal=True, window=self.window,
+                    q_positions=pos[None], k_positions=pbuf)
+        ao = ao.reshape(n, 1, self.h * self.dh)
+        so, sstate = self._ssd(call, h, state0=cache["ssm"])
+        y = 0.5 * (call("norm_attn", ao) + call("norm_ssm", so))
+        x = x + call("wo", y)
+        x = self._ffn(call, x)
+        return (x, pos), {"k": ck, "v": cv, "pos": pbuf, "ssm": sstate}
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder / decoder blocks
+# ---------------------------------------------------------------------------
+
+
+class EncBlock(AttnBlock):
+    def __init__(self, d, n_heads, d_ff, dtype=jnp.float32):
+        super().__init__(d, n_heads, n_heads, d_ff, causal=False,
+                         norm="layernorm", act="gelu", glu=False,
+                         qkv_bias=True, dtype=dtype)
+
+
+class DecBlock(Wired):
+    """Input/output: tuple (y [N,Td,d], enc [N,S,d]) — enc passes through."""
+
+    def __init__(self, d, n_heads, d_ff, dtype=jnp.float32):
+        self.d, self.h = d, n_heads
+        self.dh = d // n_heads
+        self.dtype = dtype
+        dh = self.dh
+        mkd = lambda a, b, bias=True, ax=("embed", "heads"): Dense(
+            a, b, use_bias=bias, dtype=dtype, axes=ax)
+        self.children_map = {
+            "ln1": LayerNorm(d, dtype=dtype),
+            "wq": mkd(d, d), "wk": mkd(d, d, bias=False), "wv": mkd(d, d),
+            "wo": mkd(d, d, ax=("heads", "embed")),
+            "lnx": LayerNorm(d, dtype=dtype),
+            "cq": mkd(d, d), "ck": mkd(d, d, bias=False), "cv": mkd(d, d),
+            "co": mkd(d, d, ax=("heads", "embed")),
+            "ln2": LayerNorm(d, dtype=dtype),
+            "w1": Dense(d, d_ff, use_bias=True, dtype=dtype, axes=("embed", "mlp")),
+            "w2": Dense(d_ff, d, use_bias=True, dtype=dtype, axes=("mlp", "embed")),
+        }
+
+    def _heads(self, x):
+        n, t = x.shape[:2]
+        return x.reshape(n, t, self.h, self.dh)
+
+    def wire(self, call, params, x):
+        y, enc = x
+        n, t = y.shape[:2]
+        h = call("ln1", y)
+        a = F.sdpa(self._heads(call("wq", h)), self._heads(call("wk", h)),
+                   self._heads(call("wv", h)), causal=True)
+        y = y + call("wo", a.reshape(n, t, self.d))
+        h = call("lnx", y)
+        c = F.sdpa(self._heads(call("cq", h)), self._heads(call("ck", enc)),
+                   self._heads(call("cv", enc)), causal=False)
+        y = y + call("co", c.reshape(n, t, self.d))
+        h = call("ln2", y)
+        y = y + call("w2", jax.nn.gelu(call("w1", h)))
+        return (y, enc)
+
+    def init_cache(self, params, batch, max_len, dtype):
+        return {
+            "k": jnp.zeros((batch, max_len, self.h, self.dh), dtype),
+            "v": jnp.zeros((batch, max_len, self.h, self.dh), dtype),
+            "pos": -jnp.ones((max_len,), jnp.int32),
+            # cross K/V filled at prefill from the encoder output
+            "ck": None,
+            "cv": None,
+        }
+
+    def cache_axes(self):
+        from repro.core.module import Axes
+        return {"k": Axes(("batch", "kv_seq", "kv", "head")),
+                "v": Axes(("batch", "kv_seq", "kv", "head")),
+                "pos": Axes(("kv_seq",)),
+                "ck": Axes(("batch", "kv_seq", "kv", "head")),
+                "cv": Axes(("batch", "kv_seq", "kv", "head"))}
+
+    def wire_step(self, call, params, xp, cache):
+        y, pos = xp
+        n = y.shape[0]
+        h = call("ln1", y)
+        k = self._heads(call("wk", h))
+        v = self._heads(call("wv", h))
+        ck_, cv_, pbuf = F.cache_update(cache["k"], cache["v"], cache["pos"],
+                                        k, v, pos, ring=jnp.asarray(False))
+        a = F.sdpa(self._heads(call("wq", h)), ck_, cv_, causal=True,
+                   q_positions=pos[None], k_positions=pbuf)
+        y = y + call("wo", a.reshape(n, 1, self.d))
+        h = call("lnx", y)
+        c = F.sdpa(self._heads(call("cq", h)), cache["ck"], cache["cv"],
+                   causal=False)
+        y = y + call("co", c.reshape(n, 1, self.d))
+        h = call("ln2", y)
+        y = y + call("w2", jax.nn.gelu(call("w1", h)))
+        return (y, pos), {"k": ck_, "v": cv_, "pos": pbuf,
+                          "ck": cache["ck"], "cv": cache["cv"]}

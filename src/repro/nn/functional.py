@@ -1,0 +1,262 @@
+"""Parameter-free mixing primitives used inside ``Wired.wire`` functions.
+
+All functions are pure jnp/lax — differentiable by the Wired VJP taps, and
+TPU-idiomatic: mixing is phrased as batched matmuls (MXU) and the recurrent
+scans are *chunked* so the inner work is matmul-shaped rather than a
+length-T elementwise loop (the TPU-native adaptation of RWKV/SSD GPU
+kernels, see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+GLOBAL_WINDOW = 1 << 30  # "window" value meaning full/global attention
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dh, theta=10000.0):
+    return theta ** (-jnp.arange(0, dh, 2, dtype=jnp.float32) / dh)
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: [N, T, H, dh]; positions: [T] array or traced scalar."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [dh/2]
+    pos = jnp.asarray(positions, jnp.float32)
+    ang = pos[..., None] * freqs
+    if ang.ndim == 1:        # scalar position (decode)
+        ang = ang[None, None, None]      # [1, 1, 1, dh/2]
+    else:                    # [T, dh/2]
+        ang = ang[None, :, None]         # [1, T, 1, dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., : dh // 2].astype(jnp.float32), x[..., dh // 2:].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# scaled dot-product attention (GQA, causal, dynamic sliding window)
+# ---------------------------------------------------------------------------
+
+
+def sdpa(q, k, v, *, causal=True, window=None, q_positions=None,
+         k_positions=None, scale=None):
+    """q: [N, T, H, dh], k/v: [N, S, KV, dh(v)] → [N, T, H, dhv].
+
+    ``window`` may be a *traced* scalar — the 5:1 local:global pattern is a
+    per-layer runtime buffer so layer stacks stay scan-homogeneous.
+    ``*_positions``: absolute positions (default arange), used for masking
+    with KV caches / rings.
+    """
+    n, t, h, dh = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else dh ** -0.5
+    qp = q_positions if q_positions is not None else jnp.arange(t)
+    kp = k_positions if k_positions is not None else jnp.arange(s)
+    qg = q.reshape(n, t, kv, g, dh)
+    logits = jnp.einsum("ntkgd,nskd->nkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window is not None:
+        mask &= (qp[:, None] - kp[None, :]) < window
+    mask &= kp[None, :] >= 0  # ring-buffer slots not yet written
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    dv = v.shape[-1]
+    out = jnp.einsum("nkgts,nskd->ntkgd", p, v.astype(jnp.float32))
+    return out.reshape(n, t, h, dv).astype(q.dtype)
+
+
+def sdpa_chunked(q, k, v, *, causal=True, window=None, q_positions=None,
+                 k_positions=None, scale=None, q_chunk=512, k_chunk=1024):
+    """Flash-attention-style chunked attention (TPU adaptation).
+
+    Online-softmax over k-blocks inside a scan over q-blocks; each q-block
+    is wrapped in ``jax.checkpoint`` so the backward pass recomputes block
+    internals instead of saving [T×S] probability matrices — activation
+    memory drops from O(T²) to O(T·chunk) at ≤2× attention FLOPs.  This is
+    the memory-roofline lever for the train/prefill shapes (see §Perf).
+    """
+    n, t, h, dh = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    dv = v.shape[-1]
+    scale = scale if scale is not None else dh ** -0.5
+    qp = q_positions if q_positions is not None else jnp.arange(t)
+    kp = k_positions if k_positions is not None else jnp.arange(s)
+
+    cq = min(q_chunk, t)
+    while t % cq:
+        cq -= 1
+    ck = min(k_chunk, s)
+    while s % ck:
+        ck -= 1
+    nq, nk = t // cq, s // ck
+
+    qf = q.reshape(n, nq, cq, kv, g, dh)
+    qpb = qp.reshape(nq, cq)
+    kb = k.reshape(n, nk, ck, kv, dh)
+    vb = v.reshape(n, nk, ck, kv, dv)
+    kpb = kp.reshape(nk, ck)
+
+    def q_block(qi, qpos):
+        # qi: [n, cq, kv, g, dh]; qpos: [cq]
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kbi, vbi, kpos = inputs  # [n, ck, kv, dh], [n, ck, kv, dv], [ck]
+            logits = jnp.einsum("ntkgd,nskd->nkgts",
+                                qi.astype(jnp.float32),
+                                kbi.astype(jnp.float32)) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            mask &= kpos[None, :] >= 0
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("nkgts,nskd->nkgtd", p, vbi.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((n, kv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((n, kv, g, cq), jnp.float32)
+        a0 = jnp.zeros((n, kv, g, cq, dv), jnp.float32)
+        with jax.named_scope(f"flashk_T{nk}"):
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+                 kpb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)  # [n, cq, kv, g, dv]
+
+    blk = jax.checkpoint(q_block)
+
+    def scan_q(_, inp):
+        qi, qpos = inp
+        return None, blk(qi, qpos)
+
+    with jax.named_scope(f"flashq_T{nq}"):
+        _, outs = jax.lax.scan(scan_q, None,
+                               (jnp.moveaxis(qf, 1, 0), qpb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(n, t, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked linear-attention scans (RWKV6 "Finch" / Mamba-2 SSD)
+# ---------------------------------------------------------------------------
+
+
+def wkv_chunked(r, k, v, log_w, u=None, state0=None, chunk=16):
+    """RWKV6 recurrence, chunk-parallel (TPU adaptation: matmul-shaped).
+
+        S_t = diag(w_t) S_{t-1} + k_t v_tᵀ ;   y_t = r_tᵀ S_{t-1} + (r·u·k)_t v_t
+
+    r, k: [N, T, H, dk];  v: [N, T, H, dv];  log_w: [N, T, H, dk] (≤ 0);
+    u: [H, dk] bonus or None;  state0: [N, H, dk, dv] or None.
+    Returns (y [N, T, H, dv], state [N, H, dk, dv]).
+
+    SSD/Mamba-2 is the special case of scalar per-head decay (broadcast
+    log_w over dk) with u=None.
+    """
+    n, t, h, dk = r.shape
+    dv = v.shape[-1]
+    if t % chunk != 0:
+        chunk = 1 if t < chunk else [c for c in range(chunk, 0, -1) if t % c == 0][0]
+    nc = t // chunk
+    rs = r.reshape(n, nc, chunk, h, dk).astype(jnp.float32)
+    ks = k.reshape(n, nc, chunk, h, dk).astype(jnp.float32)
+    vs = v.reshape(n, nc, chunk, h, dv).astype(jnp.float32)
+    lw = jnp.clip(log_w.reshape(n, nc, chunk, h, -1).astype(jnp.float32),
+                  -60.0, -1e-6)
+    lw = jnp.broadcast_to(lw, (n, nc, chunk, h, dk))
+    if state0 is None:
+        state0 = jnp.zeros((n, h, dk, dv), jnp.float32)
+
+    strict = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def per_chunk(S, xs):
+        rc, kc, vc, lwc = xs  # [n, chunk, h, ...]
+        P = jnp.cumsum(lwc, axis=1)              # inclusive log-decay
+        E = P - lwc                               # exclusive
+        r_t = rc * jnp.exp(E)                     # r̃
+        k_t = kc * jnp.exp(-P)                    # k̃  (bounded: chunk small)
+        A = jnp.einsum("nthd,nshd->nhts", r_t, k_t) * strict[None, None]
+        y = jnp.einsum("nhts,nshd->nthd", A, vc)
+        if u is not None:
+            diag = jnp.einsum("nthd,hd,nthd->nth", rc, u.astype(jnp.float32), kc)
+            y = y + diag[..., None] * vc
+        y = y + jnp.einsum("nthd,nhde->nthe", r_t, S)
+        decay_end = jnp.exp(P[:, -1])             # [n, h, dk]
+        k_end = kc * jnp.exp(P[:, -1][:, None] - P)
+        S_new = decay_end[..., None] * S + jnp.einsum(
+            "nthd,nthe->nhde", k_end, vc
+        )
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rs, ks, vs, lw))
+    with jax.named_scope(f"wkvchunk_T{nc}"):
+        state, ys = jax.lax.scan(per_chunk, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(n, t, h, dv)
+    return y.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, log_w, u, state):
+    """Single-token WKV step (decode). r,k: [N,H,dk]; v: [N,H,dv]."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(jnp.clip(log_w.astype(jnp.float32), -60.0, -1e-6))
+    w = jnp.broadcast_to(w, kf.shape)
+    y = jnp.einsum("nhd,nhde->nhe", rf, state)
+    if u is not None:
+        y = y + jnp.einsum("nhd,hd,nhd->nh", rf, u.astype(jnp.float32), kf)[..., None] * vf
+    state = w[..., None] * state + kf[..., None] * vf[..., None, :]
+    return y.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# token shift (RWKV)
+# ---------------------------------------------------------------------------
+
+
+def token_shift(x, last=None):
+    """x_{t-1} (zeros / `last` for t=0).  x: [N, T, D]."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None] if last.ndim == 2 else last
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache helpers (decode)
+# ---------------------------------------------------------------------------
+
+
+def cache_update(cache_k, cache_v, pos_buf, k_new, v_new, pos, ring):
+    """Insert one position into a (possibly ring) KV cache.
+
+    cache_k/v: [N, S, KV, dh]; pos_buf: [S] absolute positions (-1 = empty);
+    k/v_new: [N, 1, KV, dh]; pos: traced scalar.
+    """
+    S = cache_k.shape[1]
+    slot = jnp.where(ring, pos % S, jnp.minimum(pos, S - 1))
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), slot, axis=1)
+    pos_buf = jax.lax.dynamic_update_slice_in_dim(
+        pos_buf, pos[None].astype(pos_buf.dtype), slot, axis=0
+    )
+    return cache_k, cache_v, pos_buf

@@ -1,0 +1,249 @@
+"""Model assemblies: CausalLM (all LM archs), Whisper enc-dec, VLM frontends.
+
+``build_model(cfg)`` returns the root ``Module``; the same module tree
+serves training (``engine.run`` / ``jax.grad``), the BackPACK extensions,
+and decode (``serve_step`` with per-block caches).
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.module import (
+    Dense,
+    Embedding,
+    LayerNorm,
+    Module,
+    RMSNorm,
+    ScanStack,
+    Sequential,
+)
+from repro.nn.blocks import (
+    AttnBlock,
+    AttnMoEBlock,
+    DecBlock,
+    EncBlock,
+    HymbaBlock,
+    MLAMoEBlock,
+    RWKV6Block,
+)
+from repro.nn.layers import Param
+from repro.nn.wired import Wired
+
+
+def sinusoid_pos(t, d, dtype=jnp.float32):
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((t, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+class PrefixEmbed(Wired):
+    """VLM/audio frontend stub: concat precomputed prefix embeddings with
+    token embeddings.  x: {'tokens': [N,Tt] int, 'prefix': [N,P,d] float}."""
+
+    def __init__(self, vocab, d, dtype=jnp.float32):
+        self.d = d
+        self.children_map = {"emb": Embedding(vocab, d, dtype=dtype)}
+
+    def wire(self, call, params, x):
+        toks = call("emb", x["tokens"])
+        return jnp.concatenate([x["prefix"].astype(toks.dtype), toks], axis=1)
+
+    def embed_tokens(self, params, tokens):
+        return self.children_map["emb"].apply(params["emb"], tokens)
+
+
+class TokenEmbed(Wired):
+    def __init__(self, vocab, d, dtype=jnp.float32):
+        self.d = d
+        self.children_map = {"emb": Embedding(vocab, d, dtype=dtype)}
+
+    def wire(self, call, params, x):
+        return call("emb", x)
+
+    def embed_tokens(self, params, tokens):
+        return self.children_map["emb"].apply(params["emb"], tokens)
+
+
+class CausalLM(Sequential):
+    """[embed, *stacks, norm, head] with a single-token decode path."""
+
+    def __init__(self, embed, stacks: List[Module], norm, head):
+        super().__init__([embed] + stacks + [norm, head])
+        self.n_stacks = len(stacks)
+
+    @property
+    def stacks(self):
+        return self.mods[1: 1 + self.n_stacks]
+
+    def init_serve_cache(self, params, batch, max_len, dtype):
+        return tuple(
+            s.init_cache(p, batch, max_len, dtype)
+            for s, p in zip(self.stacks, params[1: 1 + self.n_stacks])
+        )
+
+    def cache_axes(self):
+        return tuple(s.cache_axes() for s in self.stacks)
+
+    def serve_step(self, params, caches, tokens, pos):
+        """tokens: [N] int32; pos: scalar int32 → (logits [N,V], caches)."""
+        emb = self.mods[0]
+        h = emb.embed_tokens(params[0], tokens[:, None])
+        x = (h, pos)
+        new_caches = []
+        for i, stack in enumerate(self.stacks):
+            x, c = stack.decode_step(params[1 + i], x, caches[i])
+            new_caches.append(c)
+        h = self.mods[-2].apply(params[-2], x[0])
+        logits = self.mods[-1].apply(params[-1], h)
+        return logits[:, 0], tuple(new_caches)
+
+
+class WhisperModel(Wired):
+    """Encoder-decoder; frontend stub feeds precomputed frame embeddings.
+
+    x: {'frames': [N, S, d], 'tokens': [N, Td] int} → logits [N, Td, V].
+    """
+
+    def __init__(self, vocab, d, n_heads, d_ff, enc_layers, dec_layers,
+                 max_dec=448, dtype=jnp.float32):
+        self.d, self.max_dec = d, max_dec
+        self.dtype = dtype
+        self.children_map = {
+            "emb": Embedding(vocab, d, dtype=dtype),
+            "pos_dec": Param((max_dec, d), init=lambda k, s: 0.01 * jax.random.normal(k, s), dtype=dtype),
+            "enc": ScanStack(EncBlock(d, n_heads, d_ff, dtype=dtype), enc_layers),
+            "ln_post": LayerNorm(d, dtype=dtype),
+            "dec": ScanStack(DecBlock(d, n_heads, d_ff, dtype=dtype), dec_layers),
+            "ln_f": LayerNorm(d, dtype=dtype),
+            "head": Dense(d, vocab, use_bias=False, dtype=dtype,
+                          axes=("embed", "vocab")),
+        }
+
+    def wire(self, call, params, x):
+        frames, tokens = x["frames"], x["tokens"]
+        s, td = frames.shape[1], tokens.shape[1]
+        e = frames + sinusoid_pos(s, self.d, frames.dtype)[None]
+        e = call("enc", e)
+        e = call("ln_post", e)
+        t = call("emb", tokens) + call("pos_dec", None)[:td][None]
+        y, _ = call("dec", (t, e))
+        y = call("ln_f", y)
+        return call("head", y)
+
+    # -- serving -----------------------------------------------------------------
+    def encode(self, params, frames):
+        e = frames + sinusoid_pos(frames.shape[1], self.d, frames.dtype)[None]
+        e = self.children_map["enc"].apply(params["enc"], e)
+        return self.children_map["ln_post"].apply(params["ln_post"], e)
+
+    def init_serve_cache(self, params, batch, max_len, dtype, enc_out=None):
+        dec_stack = self.children_map["dec"]
+        caches = dec_stack.init_cache(params["dec"], batch, self.max_dec, dtype)
+        if enc_out is not None:
+            # fill per-layer cross K/V from the encoder output
+            def fill(p, c):
+                blk = dec_stack.block
+                n, s = enc_out.shape[:2]
+                ck = blk.children_map["ck"].apply(p["ck"], enc_out)
+                cv = blk.children_map["cv"].apply(p["cv"], enc_out)
+                c = dict(c)
+                c["ck"] = ck.reshape(n, s, blk.h, blk.dh)
+                c["cv"] = cv.reshape(n, s, blk.h, blk.dh)
+                return c
+
+            caches = jax.vmap(fill)(params["dec"], caches)
+        return caches
+
+    def cache_axes(self):
+        return self.children_map["dec"].cache_axes()
+
+    def serve_step(self, params, caches, tokens, pos):
+        h = self.children_map["emb"].apply(params["emb"], tokens[:, None])
+        p_dec = params["pos_dec"]["v"]
+        h = h + jax.lax.dynamic_slice_in_dim(
+            p_dec, jnp.minimum(pos, self.max_dec - 1), 1, axis=0
+        )[None]
+        x = (h, pos)
+        x, caches = self.children_map["dec"].decode_step(params["dec"], x, caches)
+        y = self.children_map["ln_f"].apply(params["ln_f"], x[0])
+        logits = self.children_map["head"].apply(params["head"], y)
+        return logits[:, 0], caches
+
+
+def _expand_segments(cfg):
+    """cfg.window_segments: list[(window_or_None, count)], cfg.pattern_repeat."""
+    segs = cfg.window_segments or [(None, cfg.n_layers)]
+    repeat = cfg.pattern_repeat or 1
+    total = sum(c for _, c in segs) * repeat
+    assert total == cfg.n_layers, (total, cfg.n_layers)
+    return segs, repeat
+
+
+def make_stacks(mk_block, segments, repeat, remat=False, seq_constraint=None):
+    segs = [
+        ScanStack(mk_block(w), c, remat=remat, seq_constraint=seq_constraint)
+        if c > 1 else mk_block(w)
+        for (w, c) in segments
+    ]
+    unit = Sequential(segs) if len(segs) > 1 else segs[0]
+    if repeat > 1:
+        return [ScanStack(unit, repeat, remat=remat and len(segs) == 1,
+                          seq_constraint=seq_constraint)]
+    return [unit]
+
+
+def build_model(cfg, remat=False, seq_constraint=None, attn_impl="naive",
+                wkv_chunk=16):
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+
+    if cfg.kind == "encdec":
+        return WhisperModel(cfg.vocab, d, cfg.n_heads, cfg.d_ff,
+                            cfg.enc_layers, cfg.dec_layers, dtype=dtype)
+
+    if cfg.kind == "rwkv":
+        mk = lambda w: RWKV6Block(d, cfg.d_ff, head_dim=cfg.head_dim or 64,
+                                  wkv_chunk=wkv_chunk, dtype=dtype)
+    elif cfg.kind == "hymba":
+        mk = lambda w: HymbaBlock(d, cfg.n_heads, cfg.kv_heads, cfg.d_ff,
+                                  head_dim=cfg.head_dim, ssm_state=cfg.ssm_state,
+                                  window=w, act=cfg.act, attn_impl=attn_impl,
+                                  rope_theta=cfg.rope_theta, dtype=dtype)
+    elif cfg.kind == "moe_mla":
+        mk = lambda w: MLAMoEBlock(
+            d, cfg.n_heads, cfg.d_expert, cfg.n_experts, cfg.top_k,
+            kv_lora=cfg.kv_lora, qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope,
+            v_dim=cfg.v_head_dim, n_shared=cfg.n_shared_experts,
+            capacity_factor=cfg.capacity_factor, rope_theta=cfg.rope_theta,
+            act=cfg.act, dtype=dtype)
+    elif cfg.kind == "moe_gqa":
+        mk = lambda w: AttnMoEBlock(
+            d, cfg.n_heads, cfg.kv_heads, cfg.d_expert, cfg.n_experts,
+            cfg.top_k, capacity_factor=cfg.capacity_factor, act=cfg.act,
+            rope_theta=cfg.rope_theta, dtype=dtype, head_dim=cfg.head_dim)
+    else:  # dense
+        mk = lambda w: AttnBlock(
+            d, cfg.n_heads, cfg.kv_heads, cfg.d_ff, head_dim=cfg.head_dim,
+            window=w, norm=cfg.norm, act=cfg.act, glu=cfg.glu,
+            rope_theta=cfg.rope_theta, rope_pct=cfg.rope_pct,
+            qkv_bias=cfg.qkv_bias, attn_impl=attn_impl, dtype=dtype)
+
+    segments, repeat = _expand_segments(cfg)
+    stacks = make_stacks(mk, segments, repeat, remat=remat,
+                         seq_constraint=seq_constraint)
+    if cfg.frontend == "vision":
+        embed = PrefixEmbed(cfg.vocab, d, dtype=dtype)
+    else:
+        embed = TokenEmbed(cfg.vocab, d, dtype=dtype)
+    norm = (RMSNorm(d, dtype=dtype) if cfg.norm == "rmsnorm"
+            else LayerNorm(d, dtype=dtype))
+    head = Dense(d, cfg.vocab, use_bias=False, dtype=dtype,
+                 axes=("embed", "vocab"))
+    return CausalLM(embed, stacks, norm, head)

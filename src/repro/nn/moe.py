@@ -1,0 +1,59 @@
+"""Capacity-based top-k MoE dispatch (GShard-style), XLA/SPMD-friendly.
+
+Tokens are routed to ``[E, capacity]`` slots by scatter (no [M, E, C]
+one-hots); expert FFNs are ``BatchedDense`` einsums sharded over the
+``expert`` axis (expert parallelism).  Gradients flow to the router through
+the combine weights; overflowed tokens are dropped (standard capacity
+semantics).  Per-expert BackPACK statistics (token-level moments, per-expert
+KFAC factors) come from ``BatchedDense``'s hand-written formulas via the
+Wired taps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def capacity(n_tokens, n_experts, top_k, factor):
+    return max(int(n_tokens * top_k * factor / n_experts + 0.999), 4)
+
+
+def route(logits, top_k):
+    """logits: [M, E] → (gates [M,k], idx [M,k], pos [M,k], probs [M,E])."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, top_k)
+    gates = vals / (jnp.sum(vals, -1, keepdims=True) + 1e-9)
+    M, E = probs.shape
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # [M, k, E]
+    ohf = oh.reshape(M * top_k, E)
+    cum = jnp.cumsum(ohf, axis=0) - ohf
+    pos = jnp.sum(cum * ohf, axis=-1).reshape(M, top_k).astype(jnp.int32)
+    return gates, idx, pos, probs
+
+
+def moe_apply(call, h, logits, E, top_k, cap_factor, act):
+    """h: [N, T, d]; logits: [N, T, E] → [N, T, d].
+
+    ``call`` applies the Wired children 'e_gate'/'e_up'/'e_down'.
+    """
+    n, t, d = h.shape
+    M = n * t
+    cap = capacity(M, E, top_k, cap_factor)
+    hf = h.reshape(M, d)
+    gates, idx, pos, _ = route(logits.reshape(M, E), top_k)
+    keep = pos < cap
+    pos_safe = jnp.where(keep, pos, cap)  # OOB rows dropped by scatter
+    idx_f = idx.reshape(-1)
+    pos_f = pos_safe.reshape(-1)
+    src = jnp.repeat(jnp.arange(M), top_k)
+    xe = jnp.zeros((E, cap, d), h.dtype).at[idx_f, pos_f].add(
+        hf[src], mode="drop"
+    )
+    ye = call("e_down", act(call("e_gate", xe)) * call("e_up", xe))
+    # combine: gather each token's k expert outputs, weight by gates
+    got = ye[idx_f, jnp.minimum(pos_f, cap - 1)]  # [M*k, d]
+    got = got * (keep.reshape(-1)[:, None]).astype(got.dtype)
+    y = jnp.sum(
+        got.reshape(M, top_k, d) * gates[..., None].astype(got.dtype), axis=1
+    )
+    return y.reshape(n, t, d)

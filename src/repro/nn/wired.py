@@ -1,0 +1,143 @@
+"""Wired — arbitrary-DAG modules with per-child cotangent taps.
+
+A ``Wired`` module owns a dict of *children* (Dense / Embedding / norms —
+the parameter holders, each with BackPACK-efficient extension formulas) and a
+``wire(call, params, x)`` function describing the dataflow between them
+(attention mixing, MoE dispatch, SSM scans, residual adds... — arbitrary
+jnp code).
+
+Backward strategy: re-run the wiring with a zero "tap" added to every child
+output and take a ``jax.vjp`` w.r.t. ``(x, taps)``.  The tap cotangents are
+exactly ∂L/∂(child output) — what each child's hand-written
+``backward``/``curv_backward`` needs to produce gradients, first-order stats
+(Eq. 5/9–11) and GGN-factor stats (Eq. 19/22) without any per-architecture
+backward derivation.  The recomputation is remat-style; XLA CSEs the
+duplicated forward work inside one jit region.
+
+This single abstraction gives the paper's modular-backprop semantics for
+every assigned architecture: GQA/MLA attention, MoE dispatch, RWKV6/SSD
+scans, hybrid heads and cross-attention are each just a ``wire`` function.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.module import Module
+
+
+class Wired(Module):
+    """Subclasses set ``self.children_map`` and implement ``wire``."""
+
+    children_map: Dict[str, Module]
+
+    def wire(self, call, params, x):
+        raise NotImplementedError
+
+    # optional decode-time wiring; ``call_step(name, x)`` applies a child
+    def wire_step(self, call_step, params, x, cache):
+        raise NotImplementedError(f"{type(self).__name__} has no decode path")
+
+    def init(self, key):
+        names = sorted(self.children_map)
+        keys = jax.random.split(key, max(len(names), 2))
+        return {n: self.children_map[n].init(k) for n, k in zip(names, keys)}
+
+    def param_axes(self):
+        return {n: c.param_axes() for n, c in self.children_map.items()}
+
+    def apply(self, params, x):
+        def call(name, xin):
+            return self.children_map[name].apply(params[name], xin)
+
+        return self.wire(call, params, x)
+
+    def forward_tape(self, params, x):
+        tapes = {}
+
+        def call(name, xin):
+            y, t = self.children_map[name].forward_tape(params[name], xin)
+            tapes[name] = t
+            return y
+
+        y = self.wire(call, params, x)
+        for n in self.children_map:
+            tapes.setdefault(n, ())
+        return y, (x, tapes)
+
+    # -- shared vjp machinery --------------------------------------------------
+    def _tap_vjp(self, params, x):
+        """vjp of the wiring w.r.t. (x, per-child output taps)."""
+        outs = {}
+
+        def rec_call(name, xin):
+            y = self.children_map[name].apply(params[name], xin)
+            outs[name] = y
+            return y
+
+        self.wire(rec_call, params, x)
+        taps0 = {n: jax.tree.map(jnp.zeros_like, o) for n, o in outs.items()}
+
+        def f(x_, taps):
+            def call(name, xin):
+                y = self.children_map[name].apply(params[name], xin)
+                return jax.tree.map(jnp.add, y, taps[name])
+
+            return self.wire(call, params, x_)
+
+        _, vjp = jax.vjp(f, x, taps0)
+        return vjp
+
+    def backward(self, params, tape, g, exts, cfg):
+        x, tapes = tape
+        vjp = self._tap_vjp(params, x)
+        g_x, g_outs = vjp(g)
+        grads, stats = {}, {}
+        for name, child in self.children_map.items():
+            if name in g_outs:
+                _, grads[name], st = child.backward(
+                    params[name], tapes[name], g_outs[name], exts, cfg
+                )
+            else:  # child not reached by this wiring (static config branch)
+                grads[name] = jax.tree.map(jnp.zeros_like, params[name])
+                st = {}
+            for k, v in st.items():
+                stats.setdefault(k, {})[name] = v
+        # keep per-ext stat trees structurally aligned with the params dict
+        for k in stats:
+            for name in self.children_map:
+                stats[k].setdefault(name, ())
+        return g_x, grads, stats
+
+    def jac_t_mat(self, params, tape, M):
+        x, _ = tape
+        vjp = self._tap_vjp(params, x)
+        return jax.vmap(lambda m: vjp(m)[0])(M)
+
+    def curv_backward(self, params, tape, S, exts, cfg, ext_prefix):
+        x, tapes = tape
+        vjp = self._tap_vjp(params, x)
+        S_x, S_outs = jax.vmap(vjp)(S)
+        curv = {}
+        for name, child in self.children_map.items():
+            if name in S_outs:
+                _, cv = child.curv_backward(
+                    params[name], tapes[name], S_outs[name], exts, cfg, ext_prefix
+                )
+            else:
+                cv = {}
+            for k, v in cv.items():
+                curv.setdefault(k, {})[name] = v
+        for k in curv:
+            for name in self.children_map:
+                curv[k].setdefault(name, ())
+        return S_x, curv
+
+    # -- serving ----------------------------------------------------------------
+    def decode_step(self, params, x, cache):
+        def call_step(name, xin):
+            return self.children_map[name].apply(params[name], xin)
+
+        return self.wire_step(call_step, params, x, cache)

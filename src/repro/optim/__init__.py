@@ -1,0 +1,3 @@
+from repro.optim.optimizers import Optimizer, adamw, momentum_sgd, sgd
+from repro.optim.precond import curvature_optimizer
+from repro.optim.schedule import constant, cosine, linear_warmup

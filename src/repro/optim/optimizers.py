@@ -1,0 +1,94 @@
+"""Self-contained first-order optimizers (optax-style (init, update) pairs).
+
+Buffers (non-trainable leaves living in the params tree so ``lax.scan`` can
+vary them per layer) are frozen: any leaf whose path contains a key ending
+in ``_buf`` keeps a zero update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def _is_buffer_path(path):
+    for p in path:
+        key = getattr(p, "key", None) or getattr(p, "name", None)
+        if isinstance(key, str) and key.endswith("_buf"):
+            return True
+    return False
+
+
+def _mask_buffers(updates, params):
+    def fix(path, u, p):
+        if _is_buffer_path(path) or not jnp.issubdtype(p.dtype, jnp.floating):
+            return jnp.zeros_like(p)
+        return u.astype(p.dtype)
+
+    return jax.tree_util.tree_map_with_path(fix, updates, params)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def sgd(lr):
+    def init(params):
+        return ()
+
+    def update(grads, state, params, **kw):
+        ups = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return _mask_buffers(ups, params), state
+
+    return Optimizer(init, update)
+
+
+def momentum_sgd(lr, rho=0.9):
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, **kw):
+        new_m = jax.tree.map(
+            lambda m, g: rho * m + g.astype(jnp.float32), state, grads
+        )
+        ups = jax.tree.map(lambda m: -lr * m, new_m)
+        return _mask_buffers(ups, params), new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr_scale=1.0, **kw):
+        t = state["t"] + 1
+        b1t = 1 - b1 ** t.astype(jnp.float32)
+        b2t = 1 - b2 ** t.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+
+        def upd(m_, v_, p):
+            mhat = m_ / b1t
+            vhat = v_ / b2t
+            return -lr * lr_scale * (mhat / (jnp.sqrt(vhat) + eps)
+                                     + weight_decay * p.astype(jnp.float32))
+
+        ups = jax.tree.map(upd, m, v, params)
+        return _mask_buffers(ups, params), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)

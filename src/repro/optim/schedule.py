@@ -1,0 +1,25 @@
+"""LR schedules as step -> multiplier callables (jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)
+
+
+def linear_warmup(warmup_steps):
+    def f(step):
+        return jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1)).astype(jnp.float32)
+
+    return f
+
+
+def cosine(total_steps, warmup_steps=0, final=0.1):
+    def f(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+        cos = final + (1 - final) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return (warm * cos).astype(jnp.float32)
+
+    return f

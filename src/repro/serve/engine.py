@@ -1,0 +1,94 @@
+"""Batched serving engine: prefill → decode with KV caches + sampling.
+
+``generate`` runs a static-batch decode loop with greedy/temperature
+sampling and per-sequence EOS tracking (finished slots keep decoding into
+a scratch position — the static-shape analogue of continuous batching's
+slot reuse; a production scheduler would swap in new requests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: int = -1          # -1: never stop early
+    cache_dtype: str = "float32"
+
+
+def prefill(model, params, caches, prompts, prompt_len):
+    """Feed prompt tokens one position at a time (cache-filling).
+
+    prompts: [N, P] int32.  Returns (caches, last_logits).
+    """
+    def body(carry, t):
+        caches, _ = carry
+        logits, caches = model.serve_step(params, caches, prompts[:, t], t)
+        return (caches, logits), None
+
+    (caches, logits), _ = jax.lax.scan(
+        body, (caches, jnp.zeros((prompts.shape[0],
+                                  _vocab_of(model)), jnp.float32)),
+        jnp.arange(prompt_len))
+    return caches, logits
+
+
+def _vocab_of(model):
+    head = model.mods[-1] if hasattr(model, "mods") else model.children_map["head"]
+    return head.d_out
+
+
+def generate(model, params, prompts, cfg: ServeConfig, rng=None):
+    """prompts: [N, P] → tokens [N, max_len] (prompt + continuation)."""
+    n, p = prompts.shape
+    caches = model.init_serve_cache(params, n, cfg.max_len,
+                                    jnp.dtype(cfg.cache_dtype))
+    caches, logits = prefill(model, params, caches, prompts, p)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def sample(logits, key):
+        if cfg.temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / cfg.temperature, axis=-1).astype(jnp.int32)
+
+    def body(carry, t):
+        caches, logits, done, key = carry
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub)
+        tok = jnp.where(done, 0, tok)
+        done = done | (tok == cfg.eos_id)
+        logits, caches = model.serve_step(params, caches, tok, t)
+        return (caches, logits, done, key), tok
+
+    done0 = jnp.zeros((n,), bool)
+    (_, _, done, _), toks = jax.lax.scan(
+        body, (caches, logits, done0, rng), jnp.arange(p, cfg.max_len))
+    return jnp.concatenate([prompts, toks.T.astype(jnp.int32)], axis=1)
+
+
+def generate_whisper(model, params, frames, cfg: ServeConfig, bos=0,
+                     rng=None):
+    """Whisper: encode frames once, then decode text tokens."""
+    n = frames.shape[0]
+    enc_out = model.encode(params, frames)
+    caches = model.init_serve_cache(params, n, model.max_dec,
+                                    jnp.dtype(cfg.cache_dtype),
+                                    enc_out=enc_out)
+    tok0 = jnp.full((n,), bos, jnp.int32)
+
+    def body(carry, t):
+        caches, tok = carry
+        logits, caches = model.serve_step(params, caches, tok, t)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return (caches, nxt), nxt
+
+    (_, _), toks = jax.lax.scan(body, (caches, tok0),
+                                jnp.arange(min(cfg.max_len, model.max_dec)))
+    return toks.T

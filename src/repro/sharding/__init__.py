@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    RULES,
+    Rules,
+    batch_axes,
+    input_shardings,
+    partition_specs,
+    rules_for,
+)

@@ -1,0 +1,137 @@
+"""Logical-axis → mesh-axis rules (MaxText-style), with divisibility
+fallbacks.
+
+Every parameter/cache leaf carries logical axis names (``Axes``); a
+``Rules`` table maps those to mesh axes per execution mode.  A mesh axis is
+only applied when the dimension is divisible by the axis size and the mesh
+axis is not already used by an earlier dimension of the same leaf —
+otherwise the dimension is replicated.  This keeps the same rule table valid
+across all 10 architectures (e.g. hymba's 25-head projections simply fall
+back to replication on the 'model' axis where 25∤16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.module import Axes, is_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: Dict[str, object]  # logical name -> mesh axis (str/tuple/None)
+
+    def get(self, name):
+        return self.table.get(name)
+
+
+def rules_for(mode: str, multi_pod: bool) -> Rules:
+    data = ("pod", "data") if multi_pod else ("data",)
+    base = {
+        "vocab": "model",
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "expert": "model",
+        "embed": None,
+        "layers": None,
+        "head": None,
+        "batch": data,
+        "seq": None,
+        "kv_seq": None,
+    }
+    if mode == "long":  # batch=1 long-context decode: context parallelism
+        base["batch"] = None
+        base["kv_seq"] = data
+    return Rules(base)
+
+
+RULES = rules_for  # alias
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _axis_size(mesh, name):
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        s = 1
+        for n in name:
+            s *= mesh.shape[n]
+        return s
+    return mesh.shape[name]
+
+
+def _spec_for_leaf(axes: Axes, shape, rules: Rules, mesh):
+    spec = []
+    used = set()
+    names = tuple(axes.names)
+    # leaves may have more dims than names if stacked; left-pad with 'layers'
+    if len(names) < len(shape):
+        names = ("layers",) * (len(shape) - len(names)) + names
+    for dim, logical in zip(shape, names[: len(shape)]):
+        mesh_axis = rules.get(logical) if logical else None
+        if mesh_axis is None:
+            spec.append(None)
+            continue
+        key = tuple(mesh_axis) if isinstance(mesh_axis, tuple) else (mesh_axis,)
+        if used & set(key):
+            spec.append(None)
+            continue
+        size = _axis_size(mesh, mesh_axis)
+        if size > 1 and dim % size == 0:
+            spec.append(mesh_axis)
+            used |= set(key)
+        else:
+            spec.append(None)
+    return NamedSharding(mesh, P(*spec))
+
+
+def partition_specs(axes_tree, shape_tree, rules: Rules, mesh):
+    """axes_tree: pytree of Axes; shape_tree: matching pytree of
+    ShapeDtypeStruct/arrays → pytree of NamedSharding."""
+    flat_shapes, treedef = jax.tree_util.tree_flatten(shape_tree)
+    flat_axes = jax.tree_util.tree_leaves(axes_tree, is_leaf=is_axes)
+    if len(flat_axes) != len(flat_shapes):
+        raise ValueError(
+            f"axes/shape tree mismatch: {len(flat_axes)} vs {len(flat_shapes)}"
+        )
+    specs = [
+        _spec_for_leaf(a, s.shape, rules, mesh)
+        for a, s in zip(flat_axes, flat_shapes)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def input_shardings(kind, specs, rules: Rules, mesh):
+    """Shardings for the input-spec dict produced by configs.input_specs."""
+    data = rules.get("batch")
+
+    def shard_batched(leaf, extra=()):
+        spec = [data] + [None] * (len(leaf.shape) - 1)
+        if data is None:
+            spec[0] = None
+        # divisibility check
+        size = _axis_size(mesh, data) if data else 1
+        if size > 1 and leaf.shape and leaf.shape[0] % size != 0:
+            spec[0] = None
+        return NamedSharding(mesh, P(*spec))
+
+    if kind == "train":
+        return {
+            "inputs": jax.tree.map(shard_batched, specs["inputs"]),
+            "labels": jax.tree.map(shard_batched, specs["labels"]),
+        }
+    if kind == "prefill":
+        return {"inputs": jax.tree.map(shard_batched, specs["inputs"])}
+    # decode: tokens [B], pos scalar; caches handled by partition_specs
+    return {
+        "tokens": shard_batched(specs["tokens"]),
+        "pos": NamedSharding(mesh, P()),
+    }

@@ -1,0 +1,6 @@
+from repro.train.step import (
+    make_decode_step,
+    make_extended_train_step,
+    make_prefill_step,
+    make_train_step,
+)

@@ -1,0 +1,83 @@
+"""Training loop: jit step + synthetic data + checkpoint + watchdog.
+
+Small enough to run on CPU for examples/tests, structured like the real
+thing: deterministic step-indexed data (resume needs no iterator state),
+periodic atomic checkpoints, straggler watchdog, failure injection hook,
+and the restart driver from ``fault.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CrossEntropyLoss, ExtensionConfig
+from repro.data.synthetic import batch_for
+from repro.train import checkpoint as ckpt
+from repro.train.fault import FailureInjector, Watchdog
+from repro.train.step import make_extended_train_step, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    batch_override: Optional[int] = None
+
+
+def fit(model, cfg, shape, opt, loop: LoopConfig,
+        extensions: Sequence = (), ext_cfg: Optional[ExtensionConfig] = None,
+        injector: Optional[FailureInjector] = None, resume: bool = False,
+        log_fn: Callable = print, track: Sequence[str] = ()):
+    """Train `model` (built from arch config `cfg`) on synthetic data."""
+    loss = CrossEntropyLoss()
+    params = model.init(jax.random.PRNGKey(loop.seed))
+    opt_state = opt.init(params)
+    start_step = 0
+    if resume and loop.ckpt_dir:
+        last = ckpt.latest_step(loop.ckpt_dir)
+        if last is not None:
+            params, opt_state, manifest = ckpt.restore(
+                loop.ckpt_dir, last, params, opt_state)
+            start_step = manifest["step"]
+            log_fn(f"[resume] step {start_step}")
+
+    if extensions:
+        step_fn = jax.jit(make_extended_train_step(
+            model, loss, opt, extensions, ext_cfg, track=track))
+    else:
+        step_fn = jax.jit(make_train_step(model, loss, opt))
+
+    wd = Watchdog()
+    history = []
+    for step in range(start_step, loop.steps):
+        if injector is not None:
+            injector.check(step)
+        batch = batch_for(cfg, shape, step, seed=loop.seed,
+                          batch=loop.batch_override)
+        t0 = time.monotonic()
+        if extensions:
+            rng = jax.random.fold_in(jax.random.PRNGKey(loop.seed + 1), step)
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.int32(step), rng)
+        else:
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.int32(step))
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dur = time.monotonic() - t0
+        wd.beat(step, dur)
+        history.append(metrics)
+        if step % loop.log_every == 0:
+            log_fn(f"step {step:5d} loss {metrics['loss']:.4f} "
+                   f"({dur*1e3:.0f} ms)")
+        if loop.ckpt_dir and (step + 1) % loop.ckpt_every == 0:
+            ckpt.save(loop.ckpt_dir, step + 1, params, opt_state)
+    if loop.ckpt_dir:
+        ckpt.save(loop.ckpt_dir, loop.steps, params, opt_state)
+    return params, opt_state, history, wd

@@ -1,0 +1,127 @@
+"""Step builders: train (grad / grad+extensions), prefill, decode.
+
+``make_train_step`` is the production path: ``jax.grad`` backward (XLA's
+fused backprop) + optimizer.  ``make_extended_train_step`` runs the
+BackPACK engine instead, harvesting extension quantities in the same sweep
+— used by the curvature-preconditioned optimizer (paper §4) and the noise-
+scale/variance telemetry.
+
+Options map to the §Perf hillclimb levers:
+  * ``microbatch`` — gradient accumulation via lax.scan (activation memory
+    ÷ microbatches; the per-microbatch psum overlaps the next microbatch's
+    compute under XLA's latency-hiding scheduler),
+  * ``remat``     — rematerialize each block (checkpoint policy),
+  * ``seq_shard_axis`` — Megatron-style sequence sharding of the residual
+    stream between blocks (activation memory ÷ |model|).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ExtensionConfig
+from repro.core import engine as eng
+from repro.optim.optimizers import apply_updates
+
+
+def make_loss_fn(model, loss, remat=False):
+    def loss_fn(params, inputs, labels):
+        apply = model.apply
+        if remat:
+            apply = jax.checkpoint(apply)
+        z = apply(params, inputs)
+        return loss.value(z, labels)
+
+    return loss_fn
+
+
+def make_train_step(model, loss, opt, *, microbatch: int = 1,
+                    remat: bool = False, grad_dtype=None):
+    loss_fn = make_loss_fn(model, loss, remat=remat)
+
+    def single(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch["inputs"], batch["labels"])
+
+    def accumulate(params, batch):
+        def reshape(x):
+            return x.reshape((microbatch, x.shape[0] // microbatch) + x.shape[1:])
+
+        mb = jax.tree.map(reshape, batch)
+
+        def body(carry, b):
+            lv, g = jax.value_and_grad(loss_fn)(params, b["inputs"], b["labels"])
+            if grad_dtype is not None:
+                g = jax.tree.map(lambda a: a.astype(grad_dtype), g)
+            acc_l, acc_g = carry
+            return (acc_l + lv, jax.tree.map(jnp.add, acc_g, g)), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, grad_dtype or jnp.float32), params
+        )
+        with jax.named_scope(f"mbscan_T{microbatch}"):
+            (lv, g), _ = jax.lax.scan(body, (jnp.float32(0), zero_g), mb)
+        scale = 1.0 / microbatch
+        return lv * scale, jax.tree.map(lambda a: a * scale, g)
+
+    fwd_bwd = single if microbatch == 1 else accumulate
+
+    def step(params, opt_state, batch, step_idx):
+        lv, grads = fwd_bwd(params, batch)
+        ups, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, ups)
+        return params, opt_state, {"loss": lv, "step": step_idx + 1}
+
+    return step
+
+
+def make_extended_train_step(model, loss, opt, extensions,
+                             cfg: Optional[ExtensionConfig] = None,
+                             track: Sequence[str] = ()):
+    """Engine-backed step: gradient + extensions in one generalized
+    backprop; curvature goes to the optimizer (Eq. 7), tracked scalars
+    (e.g. mean variance → gradient-noise telemetry) go to metrics."""
+    cfg = cfg or ExtensionConfig()
+    ext_names = {e.name for e in extensions}
+    curv_name = next(
+        (n for n in ("kfac", "kflr", "diag_ggn_mc", "diag_ggn", "kfra",
+                     "diag_hessian") if n in ext_names), None)
+
+    def step(params, opt_state, batch, step_idx, rng):
+        res = eng.run(model, params, batch["inputs"], batch["labels"], loss,
+                      extensions=extensions, cfg=cfg, rng=rng)
+        kw = {}
+        if curv_name is not None:
+            kw["curv"] = res.ext[curv_name]
+        ups, new_opt = opt.update(res.grads, opt_state, params, **kw)
+        params = apply_updates(params, ups)
+        metrics = {"loss": res.loss, "step": step_idx + 1}
+        for name in track:
+            tree = res.ext.get(name)
+            if tree is not None:
+                leaves = [l for l in jax.tree.leaves(tree)]
+                if leaves:
+                    metrics[f"{name}_mean"] = sum(
+                        jnp.mean(l.astype(jnp.float32)) for l in leaves
+                    ) / len(leaves)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(model):
+    def prefill(params, inputs):
+        z = model.apply(params, inputs)
+        return z[:, -1, :]
+
+    return prefill
+
+
+def make_decode_step(model):
+    def decode(params, caches, tokens, pos):
+        logits, caches = model.serve_step(params, caches, tokens, pos)
+        return logits, caches
+
+    return decode

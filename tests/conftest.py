@@ -1,0 +1,17 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Keep the single-host test session inside RAM: compiled executables
+    accumulate across modules otherwise (OOM on 35 GB hosts)."""
+    yield
+    jax.clear_caches()

@@ -1,0 +1,115 @@
+"""First-order extensions vs autodiff oracles (paper §2.2 / App. A.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Activation,
+    BatchGrad,
+    BatchL2,
+    CrossEntropyLoss,
+    Dense,
+    MSELoss,
+    SecondMoment,
+    Sequential,
+    Variance,
+    oracle,
+    run,
+)
+
+N, D, H, C = 6, 5, 7, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = Sequential([Dense(D, H), Activation("sigmoid"), Dense(H, C)])
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    y = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, C)
+    loss = CrossEntropyLoss()
+    res = run(model, params, x, y, loss,
+              extensions=(BatchGrad, BatchL2, SecondMoment, Variance))
+    psg = oracle.per_sample_grads(model, loss, params, x, y)
+    og = oracle.grad(model, loss, params, x, y)
+    return model, params, x, y, loss, res, psg, og
+
+
+def test_loss_and_grads(setup):
+    model, params, x, y, loss, res, psg, og = setup
+    np.testing.assert_allclose(
+        res.loss, oracle.loss_fn(model, loss, params, x, y), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(res.grads), jax.tree.leaves(og)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_batch_grad(setup):
+    *_, res, psg, og = setup
+    for a, b in zip(jax.tree.leaves(res["batch_grad"]), jax.tree.leaves(psg)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_batch_grad_sums_to_grad(setup):
+    *_, res, psg, og = setup
+    for a, b in zip(jax.tree.leaves(res["batch_grad"]), jax.tree.leaves(og)):
+        np.testing.assert_allclose(jnp.sum(a, 0), b, rtol=1e-4, atol=1e-6)
+
+
+def test_batch_l2(setup):
+    *_, res, psg, og = setup
+    for a, g in zip(jax.tree.leaves(res["batch_l2"]), jax.tree.leaves(psg)):
+        np.testing.assert_allclose(
+            a, jnp.sum(g.reshape(N, -1) ** 2, -1), rtol=1e-4, atol=1e-9)
+
+
+def test_second_moment_and_variance(setup):
+    *_, res, psg, og = setup
+    sm = jax.tree.map(lambda g: N * jnp.sum(g ** 2, 0), psg)
+    for a, b in zip(jax.tree.leaves(res["second_moment"]), jax.tree.leaves(sm)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-8)
+    var = jax.tree.map(lambda s, g: s - g ** 2, sm, og)
+    for a, b in zip(jax.tree.leaves(res["variance"]), jax.tree.leaves(var)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-7)
+
+
+def test_mse_loss_path():
+    model = Sequential([Dense(D, C)])
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    y = jax.random.normal(jax.random.PRNGKey(2), (N, C))
+    loss = MSELoss()
+    res = run(model, params, x, y, loss, extensions=(BatchGrad,))
+    psg = oracle.per_sample_grads(model, loss, params, x, y)
+    for a, b in zip(jax.tree.leaves(res["batch_grad"]), jax.tree.leaves(psg)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_padding_mask_tokens_excluded():
+    """y = -1 positions must not contribute to loss or stats."""
+    model = Sequential([Dense(D, C)])
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (N, 3, D))
+    y = jax.random.randint(jax.random.PRNGKey(2), (N, 3), 0, C)
+    y_mask = y.at[:, -1].set(-1)
+    loss = CrossEntropyLoss()
+    r1 = run(model, params, x, y_mask, loss, extensions=(BatchGrad,))
+    # oracle: zero-out masked positions by slicing
+    r2 = run(model, params, x[:, :2], y[:, :2], loss, extensions=(BatchGrad,))
+    for a, b in zip(jax.tree.leaves(r1.grads), jax.tree.leaves(r2.grads)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_batch_dot_matches_oracle(setup):
+    from repro.core import BatchDot
+
+    model, params, x, y, loss, _, psg, _ = setup
+    res = run(model, params, x, y, loss, extensions=(BatchDot, BatchL2))
+    for d, g, l2 in zip(jax.tree.leaves(res["batch_dot"]),
+                        jax.tree.leaves(psg),
+                        jax.tree.leaves(res["batch_l2"])):
+        gf = np.asarray(g, np.float32).reshape(N, -1)
+        np.testing.assert_allclose(np.asarray(d), gf @ gf.T,
+                                   rtol=2e-4, atol=1e-8)
+        # diagonal of the pairwise dots == batch_l2
+        np.testing.assert_allclose(np.asarray(jnp.diagonal(d)),
+                                   np.asarray(l2), rtol=2e-4, atol=1e-8)

@@ -1,0 +1,153 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+TOL = {jnp.float32: dict(rtol=3e-5, atol=3e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n,a,b", [(3, 16, 8), (37, 130, 65), (256, 128, 128),
+                                   (1, 7, 300)])
+def test_sq_matmul(n, a, b, dtype):
+    k = jax.random.PRNGKey(n + a)
+    A, B = _rand(k, (n, a), dtype), _rand(jax.random.fold_in(k, 1), (n, b), dtype)
+    np.testing.assert_allclose(
+        np.asarray(ops.sq_matmul(A, B)), np.asarray(ref.sq_matmul(A, B)),
+        **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n,r,a,b", [(2, 5, 16, 8), (5, 23, 130, 70),
+                                     (8, 64, 128, 128), (1, 1, 9, 400)])
+def test_per_sample_moment(n, r, a, b, dtype):
+    k = jax.random.PRNGKey(r + a)
+    A = _rand(k, (n, r, a), dtype)
+    B = _rand(jax.random.fold_in(k, 1), (n, r, b), dtype)
+    np.testing.assert_allclose(
+        np.asarray(ops.per_sample_moment(A, B)),
+        np.asarray(ref.per_sample_moment(A, B)), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n,r,a,b", [(2, 5, 6, 8), (6, 37, 50, 40),
+                                     (3, 130, 16, 16)])
+def test_batch_l2(n, r, a, b, dtype):
+    k = jax.random.PRNGKey(r * a)
+    A = _rand(k, (n, r, a), dtype)
+    B = _rand(jax.random.fold_in(k, 1), (n, r, b), dtype)
+    np.testing.assert_allclose(
+        np.asarray(ops.batch_l2(A, B)), np.asarray(ref.batch_l2(A, B)),
+        **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("c,n,r,a,b", [(2, 3, 4, 8, 8), (4, 3, 17, 33, 21),
+                                       (1, 2, 9, 140, 130)])
+def test_ggn_diag(c, n, r, a, b, dtype):
+    k = jax.random.PRNGKey(c * n + r)
+    A = _rand(k, (n, r, a), dtype)
+    S = _rand(jax.random.fold_in(k, 1), (c, n, r, b), dtype)
+    np.testing.assert_allclose(
+        np.asarray(ops.ggn_diag(A, S)), np.asarray(ref.ggn_diag(A, S)),
+        **TOL[dtype])
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 12), r=st.integers(1, 9), a=st.integers(1, 40),
+       b=st.integers(1, 40), seed=st.integers(0, 2 ** 16))
+def test_per_sample_moment_hypothesis(n, r, a, b, seed):
+    k = jax.random.PRNGKey(seed)
+    A = jax.random.normal(k, (n, r, a))
+    B = jax.random.normal(jax.random.fold_in(k, 1), (n, r, b))
+    np.testing.assert_allclose(
+        np.asarray(ops.per_sample_moment(A, B)),
+        np.asarray(ref.per_sample_moment(A, B)), rtol=5e-5, atol=5e-5)
+    # invariant: the moment of a single sample is the squared gradient
+    if n == 1:
+        g = np.einsum("ra,rb->ab", np.asarray(A[0]), np.asarray(B[0]))
+        np.testing.assert_allclose(
+            np.asarray(ops.per_sample_moment(A, B)), g * g,
+            rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 10), r=st.integers(1, 8), a=st.integers(1, 24),
+       b=st.integers(1, 24), seed=st.integers(0, 2 ** 16))
+def test_batch_l2_hypothesis_nonneg_and_match(n, r, a, b, seed):
+    k = jax.random.PRNGKey(seed)
+    A = jax.random.normal(k, (n, r, a))
+    B = jax.random.normal(jax.random.fold_in(k, 1), (n, r, b))
+    got = np.asarray(ops.batch_l2(A, B))
+    assert (got >= -1e-6).all()
+    np.testing.assert_allclose(got, np.asarray(ref.batch_l2(A, B)),
+                               rtol=5e-5, atol=5e-5)
+
+
+# --- flash attention kernel ---------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 13])
+@pytest.mark.parametrize("dims", [(2, 64, 8, 4, 16), (1, 32, 4, 4, 8)])
+def test_flash_attention_kernel(window, dims):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.nn.functional import sdpa
+
+    n, t, h, kv, dh = dims
+    k0 = jax.random.PRNGKey(0)
+    q = jax.random.normal(k0, (n, t, h, dh))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (n, t, kv, dh))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (n, t, kv, dh))
+    want = sdpa(q, k, v, causal=True, window=window)
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.sampled_from([16, 48, 64]), bq=st.sampled_from([8, 16]),
+       bk=st.sampled_from([8, 16]), seed=st.integers(0, 2 ** 10))
+def test_flash_attention_block_invariance(t, bq, bk, seed):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.nn.functional import sdpa
+
+    k0 = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k0, (1, t, 4, 8))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (1, t, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (1, t, 2, 8))
+    want = sdpa(q, k, v, causal=True)
+    got = flash_attention_pallas(q, k, v, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=5e-5)
+
+
+# --- WKV kernel ---------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_wkv_kernel(chunk, dtype):
+    from repro.kernels.wkv import wkv_pallas
+    from repro.nn.functional import wkv_chunked
+
+    n, t, h, dk, dv = 2, 32, 3, 8, 8
+    k0 = jax.random.PRNGKey(0)
+    r = jax.random.normal(k0, (n, t, h, dk), dtype)
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (n, t, h, dk), dtype)
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (n, t, h, dv), dtype)
+    lw = -jnp.exp(jax.random.normal(jax.random.fold_in(k0, 3),
+                                    (n, t, h, dk)) * 0.5)
+    u = jax.random.normal(jax.random.fold_in(k0, 4), (h, dk))
+    want, _ = wkv_chunked(r, k, v, lw, u=u, chunk=8)
+    got = wkv_pallas(r, k, v, lw, u, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)

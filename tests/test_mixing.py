@@ -1,0 +1,151 @@
+"""Mixing primitives: chunked attention, WKV scan, MoE routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import functional as F
+from repro.nn.moe import capacity, route
+
+
+# --- attention ---------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [None, 13])
+@pytest.mark.parametrize("chunks", [(16, 16), (8, 32), (64, 64)])
+def test_sdpa_chunked_matches_naive(window, chunks):
+    n, t, h, kv, dh = 2, 64, 8, 4, 16
+    k0 = jax.random.PRNGKey(0)
+    q = jax.random.normal(k0, (n, t, h, dh))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (n, t, kv, dh))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (n, t, kv, dh))
+    a = F.sdpa(q, k, v, causal=True, window=window)
+    b = F.sdpa_chunked(q, k, v, causal=True, window=window,
+                       q_chunk=chunks[0], k_chunk=chunks[1])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_sdpa_chunked_grads_match():
+    n, t, h, kv, dh = 2, 32, 4, 2, 8
+    k0 = jax.random.PRNGKey(3)
+    q = jax.random.normal(k0, (n, t, h, dh))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (n, t, kv, dh))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (n, t, kv, dh))
+    ga = jax.grad(lambda q_: F.sdpa(q_, k, v).sum())(q)
+    gb = jax.grad(lambda q_: F.sdpa_chunked(q_, k, v, q_chunk=8,
+                                            k_chunk=8).sum())(q)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                               rtol=2e-4, atol=2e-5)
+
+
+# --- WKV (RWKV6/SSD) ---------------------------------------------------------
+
+def _wkv_naive(r, k, v, log_w, u, state0=None):
+    n, t, h, dk = r.shape
+    dv = v.shape[-1]
+    S = jnp.zeros((n, h, dk, dv)) if state0 is None else state0
+    w = jnp.exp(jnp.clip(log_w, -60.0, -1e-6))
+    w = jnp.broadcast_to(w, r.shape)
+    ys = []
+    for i in range(t):
+        y = jnp.einsum("nhd,nhde->nhe", r[:, i], S)
+        if u is not None:
+            diag = jnp.einsum("nhd,hd,nhd->nh", r[:, i], u, k[:, i])
+            y = y + diag[..., None] * v[:, i]
+        S = w[:, i][..., None] * S + k[:, i][..., None] * v[:, i][..., None, :]
+        ys.append(y)
+    return jnp.stack(ys, 1), S
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 8, 16])
+@pytest.mark.parametrize("with_u", [True, False])
+def test_wkv_chunked_matches_recurrence(chunk, with_u):
+    n, t, h, dk, dv = 2, 16, 3, 4, 5
+    k0 = jax.random.PRNGKey(0)
+    r = jax.random.normal(k0, (n, t, h, dk))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (n, t, h, dk))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (n, t, h, dv))
+    log_w = -jnp.exp(jax.random.normal(jax.random.fold_in(k0, 3),
+                                       (n, t, h, dk)) * 0.5)
+    u = jax.random.normal(jax.random.fold_in(k0, 4), (h, dk)) if with_u else None
+    y1, s1 = F.wkv_chunked(r, k, v, log_w, u=u, chunk=chunk)
+    y2, s2 = _wkv_naive(r, k, v, log_w, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv_scalar_decay_broadcast():
+    """SSD mode: per-head scalar decay, log_w [N,T,H,1]."""
+    n, t, h, dk, dv = 2, 8, 2, 4, 4
+    k0 = jax.random.PRNGKey(7)
+    r = jax.random.normal(k0, (n, t, h, dk))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (n, t, h, dk))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (n, t, h, dv))
+    lw1 = -jnp.exp(jax.random.normal(jax.random.fold_in(k0, 3), (n, t, h, 1)))
+    y1, _ = F.wkv_chunked(r, k, v, lw1, chunk=4)
+    y2, _ = F.wkv_chunked(r, k, v, jnp.broadcast_to(lw1, r.shape), chunk=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_wkv_step_matches_chunked():
+    n, t, h, dk, dv = 2, 6, 2, 4, 4
+    k0 = jax.random.PRNGKey(9)
+    r = jax.random.normal(k0, (n, t, h, dk))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (n, t, h, dk))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (n, t, h, dv))
+    log_w = -jnp.exp(jax.random.normal(jax.random.fold_in(k0, 3),
+                                       (n, t, h, dk)))
+    u = jax.random.normal(jax.random.fold_in(k0, 4), (h, dk))
+    y_all, _ = F.wkv_chunked(r, k, v, log_w, u=u, chunk=3)
+    state = jnp.zeros((n, h, dk, dv))
+    for i in range(t):
+        y, state = F.wkv_step(r[:, i], k[:, i], v[:, i], log_w[:, i], u, state)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_all[:, i]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# --- MoE routing --------------------------------------------------------------
+
+def test_route_properties():
+    m, e, k = 64, 8, 2
+    logits = jax.random.normal(jax.random.PRNGKey(0), (m, e))
+    gates, idx, pos, probs = route(logits, k)
+    assert gates.shape == (m, k) and idx.shape == (m, k)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), np.ones(m),
+                               rtol=1e-5)
+    # positions within each expert are unique and contiguous from 0
+    idx_f = np.asarray(idx).reshape(-1)
+    pos_f = np.asarray(pos).reshape(-1)
+    for ex in range(e):
+        p = np.sort(pos_f[idx_f == ex])
+        np.testing.assert_array_equal(p, np.arange(len(p)))
+
+
+def test_moe_block_grads_flow_to_router_and_experts():
+    from repro.configs import ARCHS
+    from repro.core import CrossEntropyLoss
+    from repro.nn.models import build_model
+    from repro.data.synthetic import batch_for
+    import dataclasses
+    from repro.configs import SHAPES
+
+    cfg = ARCHS["granite-moe-1b-a400m"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=16, global_batch=4)
+    batch = batch_for(cfg, shape, 0)
+    loss = CrossEntropyLoss()
+
+    def lf(p):
+        return loss.value(model.apply(p, batch["inputs"]), batch["labels"])
+
+    g = jax.grad(lf)(params)
+    block_g = g[1]  # ScanStack of AttnMoEBlock
+    router_g = float(sum(jnp.sum(jnp.abs(l))
+                         for l in jax.tree.leaves(block_g["router"])))
+    expert_g = float(sum(jnp.sum(jnp.abs(l))
+                         for l in jax.tree.leaves(block_g["e_down"])))
+    assert router_g > 0 and expert_g > 0

@@ -1,0 +1,99 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Activation,
+    BatchGrad,
+    BatchL2,
+    CrossEntropyLoss,
+    Dense,
+    DiagGGN,
+    KFLR,
+    SecondMoment,
+    Sequential,
+    Variance,
+    kron,
+    run,
+)
+
+LOSS = CrossEntropyLoss()
+
+
+def _model(d, h, c):
+    return Sequential([Dense(d, h), Activation("tanh"), Dense(h, c)])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 8), d=st.integers(2, 8), c=st.integers(2, 6),
+       seed=st.integers(0, 2 ** 16))
+def test_variance_nonneg_and_moment_identity(n, d, c, seed):
+    model = _model(d, d + 1, c)
+    params = model.init(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, d))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 2), (n,), 0, c)
+    res = run(model, params, x, y, LOSS,
+              extensions=(BatchGrad, SecondMoment, Variance, BatchL2))
+    for v in jax.tree.leaves(res["variance"]):
+        assert float(jnp.min(v)) >= -1e-5
+    # Σ_j second_moment_j / N == E‖∇ℓ‖²/N relation with batch_l2:
+    sm_sum = sum(float(jnp.sum(l)) for l in jax.tree.leaves(res["second_moment"]))
+    l2_sum = sum(float(jnp.sum(l)) for l in jax.tree.leaves(res["batch_l2"]))
+    np.testing.assert_allclose(sm_sum, n * l2_sum, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 6), d=st.integers(2, 6), c=st.integers(2, 5),
+       seed=st.integers(0, 2 ** 16))
+def test_ggn_psd_via_factors(n, d, c, seed):
+    model = _model(d, d, c)
+    params = model.init(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, d))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 2), (n,), 0, c)
+    res = run(model, params, x, y, LOSS, extensions=(DiagGGN, KFLR))
+    for l in jax.tree.leaves(res["diag_ggn"]):
+        assert float(jnp.min(l)) >= -1e-7
+    for slot in (0, 2):
+        f = res["kflr"][slot]
+        for mat in (f["w"]["A"], f["w"]["B"]):
+            m = np.asarray(mat, np.float64)
+            np.testing.assert_allclose(m, m.T, atol=1e-6)
+            assert np.linalg.eigvalsh(m).min() >= -1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=st.integers(2, 7), b=st.integers(2, 7), lam=st.floats(1e-3, 1.0),
+       seed=st.integers(0, 2 ** 16))
+def test_kron_solve_matches_dense(a, b, lam, seed):
+    k = jax.random.PRNGKey(seed)
+    MA = jax.random.normal(k, (a, a))
+    MB = jax.random.normal(jax.random.fold_in(k, 1), (b, b))
+    A = MA @ MA.T / a
+    B = MB @ MB.T / b
+    g = jax.random.normal(jax.random.fold_in(k, 2), (a, b))
+    got = kron.kron_solve(A, B, g, lam)
+    # dense reference with the SAME π-split damping (Eq. 28)
+    pi = kron.pi_factor(A, B)
+    Ad = A + pi * jnp.sqrt(lam) * jnp.eye(a)
+    Bd = B + jnp.sqrt(lam) / pi * jnp.eye(b)
+    dense = jnp.kron(Ad, Bd)
+    want = jnp.linalg.solve(dense, g.reshape(-1)).reshape(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 6), seed=st.integers(0, 2 ** 16))
+def test_loss_sqrt_factor_squares_to_hessian(n, seed):
+    c = 5
+    z = jax.random.normal(jax.random.PRNGKey(seed), (n, c))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (n,), 0, c)
+    S = LOSS.sqrt_hessian(z, y)  # [C·1? , n, c] — per-unit columns
+    H_from_S = jnp.einsum("kni,knj->nij", S, S)
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (n, c))
+    hv = jnp.einsum("nij,nj->ni", H_from_S, v)
+    want = LOSS.hessian_vec(z, y, v)
+    np.testing.assert_allclose(np.asarray(hv), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)

@@ -1,0 +1,131 @@
+"""Second-order extensions vs explicit-GGN / jax.hessian oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core import (
+    Activation,
+    CrossEntropyLoss,
+    Dense,
+    DiagGGN,
+    DiagGGNMC,
+    DiagHessian,
+    ExtensionConfig,
+    KFAC,
+    KFLR,
+    KFRA,
+    Sequential,
+    kron,
+    oracle,
+    run,
+)
+
+N, D, H, C = 6, 5, 7, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = Sequential([Dense(D, H), Activation("sigmoid"), Dense(H, C)])
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    y = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, C)
+    loss = CrossEntropyLoss()
+    return model, params, x, y, loss
+
+
+def test_diag_ggn_exact(setup):
+    model, params, x, y, loss = setup
+    res = run(model, params, x, y, loss, extensions=(DiagGGN,))
+    want = oracle.ggn_diag(model, loss, params, x, y)
+    got, _ = ravel_pytree(res["diag_ggn"])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+
+def test_diag_ggn_class_chunked(setup):
+    model, params, x, y, loss = setup
+    full = run(model, params, x, y, loss, extensions=(DiagGGN,))
+    for chunk in (1, 3, 4):
+        part = run(model, params, x, y, loss, extensions=(DiagGGN,),
+                   cfg=ExtensionConfig(class_chunk=chunk))
+        for a, b in zip(jax.tree.leaves(part["diag_ggn"]),
+                        jax.tree.leaves(full["diag_ggn"])):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-7)
+
+
+def test_diag_hessian(setup):
+    model, params, x, y, loss = setup
+    res = run(model, params, x, y, loss, extensions=(DiagHessian,))
+    want = oracle.hessian_diag(model, loss, params, x, y)
+    got, _ = ravel_pytree(res["diag_hessian"])
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-6)
+
+
+def test_diag_hessian_equals_ggn_for_relu(setup):
+    """Piecewise-linear nets: Hessian diag == GGN diag (Martens 2014)."""
+    _, _, x, y, loss = setup
+    model = Sequential([Dense(D, H), Activation("relu"), Dense(H, C)])
+    params = model.init(jax.random.PRNGKey(3))
+    res = run(model, params, x, y, loss, extensions=(DiagHessian, DiagGGN))
+    a, _ = ravel_pytree(res["diag_hessian"])
+    b, _ = ravel_pytree(res["diag_ggn"])
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-7)
+
+
+def test_kflr_exact_single_layer(setup):
+    """N=1 single linear layer: A ⊗ B equals the exact GGN block."""
+    _, _, _, _, loss = setup
+    m1 = Sequential([Dense(D, C)])
+    p1 = m1.init(jax.random.PRNGKey(0))
+    x1 = jax.random.normal(jax.random.PRNGKey(5), (1, D))
+    y1 = jnp.array([1])
+    r1 = run(m1, p1, x1, y1, loss, extensions=(KFLR, DiagGGN))
+    G = oracle.ggn_matrix(m1, loss, p1, x1, y1)
+    kf = r1["kflr"][0]
+    GW = kron.kron_dense(kf["w"]["A"], kf["w"]["B"])
+    np.testing.assert_allclose(GW, G[C:, C:], rtol=1e-4, atol=1e-7)  # W block
+    np.testing.assert_allclose(kf["b"]["B"], G[:C, :C], rtol=1e-4, atol=1e-7)
+
+
+def test_diag_ggn_mc_converges(setup):
+    model, params, x, y, loss = setup
+    exact = run(model, params, x, y, loss, extensions=(DiagGGN,))
+    mc = run(model, params, x, y, loss, extensions=(DiagGGNMC,),
+             cfg=ExtensionConfig(mc_samples=128), rng=jax.random.PRNGKey(7))
+    a, _ = ravel_pytree(mc["diag_ggn_mc"])
+    b, _ = ravel_pytree(exact["diag_ggn"])
+    corr = np.corrcoef(np.asarray(a), np.asarray(b))[0, 1]
+    assert corr > 0.97, corr
+    # unbiasedness: relative error of the mean shrinks with samples
+    rel = np.abs(a - b).sum() / np.abs(b).sum()
+    assert rel < 0.35, rel
+
+
+def test_kfac_b_matches_kflr_in_expectation(setup):
+    model, params, x, y, loss = setup
+    exact = run(model, params, x, y, loss, extensions=(KFLR,))
+    mc = run(model, params, x, y, loss, extensions=(KFAC,),
+             cfg=ExtensionConfig(mc_samples=256), rng=jax.random.PRNGKey(11))
+    B_mc = mc["kfac"][2]["w"]["B"]
+    B_ex = exact["kflr"][2]["w"]["B"]
+    rel = np.abs(B_mc - B_ex).sum() / np.abs(B_ex).sum()
+    assert rel < 0.25, rel
+
+
+def test_kfra_chain(setup):
+    model, params, x, y, loss = setup
+    res = run(model, params, x, y, loss, extensions=(KFRA,))
+    for slot in (0, 2):
+        f = res["kfra"][slot]
+        B = f["w"]["B"]
+        np.testing.assert_allclose(B, B.T, atol=1e-6)
+        evals = np.linalg.eigvalsh(np.asarray(B, np.float64))
+        assert evals.min() > -1e-6  # PSD
+
+
+def test_ggn_diag_nonnegative(setup):
+    model, params, x, y, loss = setup
+    res = run(model, params, x, y, loss, extensions=(DiagGGN,))
+    for l in jax.tree.leaves(res["diag_ggn"]):
+        assert float(jnp.min(l)) >= -1e-8
