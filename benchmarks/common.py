@@ -1,13 +1,25 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission + row capture."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 
+# Every emit() lands here so run.py can dump the whole session as JSON
+# (the CI quick-bench artifact).
+ROWS = []
+
+
+def quick_mode() -> bool:
+    """Short mode for CI smoke runs (set by ``run.py --quick``)."""
+    return os.environ.get("BENCH_QUICK") == "1"
+
 
 def time_fn(fn, *args, warmup=2, iters=5, **kw):
     """Median wall time (µs) of a jitted callable."""
+    if quick_mode():
+        warmup, iters = 1, 2
     for _ in range(warmup):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
@@ -21,5 +33,28 @@ def time_fn(fn, *args, warmup=2, iters=5, **kw):
     return ts[len(ts) // 2] * 1e6
 
 
+def time_group(fns, warmup=2, iters=9):
+    """Interleaved timing of {lane: thunk} → {lane: min µs}.
+
+    Round-robin across lanes each iteration so slow machine drift (noisy
+    shared CPU) hits every lane equally; min-of-k is the standard robust
+    estimator for ratio benchmarks.
+    """
+    if quick_mode():
+        warmup, iters = 1, 3
+    for _ in range(warmup):
+        for fn in fns.values():
+            jax.block_until_ready(fn())
+    best = {name: float("inf") for name in fns}
+    for _ in range(iters):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: t * 1e6 for name, t in best.items()}
+
+
 def emit(name, us, derived=""):
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": derived})
     print(f"{name},{us:.1f},{derived}")

@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
+dumps all rows as JSON (the CI quick-bench artifact), and ``--quick`` runs a
+short mode for smoke lanes: fewer timing iterations everywhere, plus
+smaller shapes where a benchmark defines them (currently ``fused``).
 
   fig3  individual gradients: for-loop vs vectorized     (paper Fig. 3)
   fig6  extension overhead vs plain gradient             (paper Fig. 6)
@@ -8,36 +11,73 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig8  KFLR vs KFAC output-dimension scaling            (paper Fig. 8)
   fig9  Hessian diag vs GGN diag with sigmoid            (paper Fig. 9)
   kernels   Pallas kernels (interpret)                   (deliverable c)
+  fused     fused first-order kernel vs per-extension    (ISSUE 1 tentpole)
   roofline  dry-run roofline table                       (deliverable g)
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick] [--json OUT]
+[names...]``
 """
-import sys
+import argparse
+import json
+import os
 
-from benchmarks import (
-    bench_c_scaling,
-    bench_hessian_diag,
-    bench_individual,
-    bench_kernels,
-    bench_optimizers,
-    bench_overhead,
-    bench_roofline,
-)
-
-ALL = {
-    "fig3": bench_individual.main,
-    "fig6": bench_overhead.main,
-    "fig7": bench_optimizers.main,
-    "fig8": bench_c_scaling.main,
-    "fig9": bench_hessian_diag.main,
-    "kernels": bench_kernels.main,
-    "roofline": bench_roofline.main,
-}
+from benchmarks import common
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(ALL)
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--quick", action="store_true",
+                    help="short mode: fewer iters, smaller shapes")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="also write all rows as JSON to this path")
+    ap.add_argument("which", nargs="*", help="benchmark names (default: all)")
+    args = ap.parse_args()
+    if args.json_path:
+        # Fail before minutes of benchmarking, not after.
+        parent = os.path.dirname(os.path.abspath(args.json_path))
+        if not os.path.isdir(parent):
+            ap.error(f"--json: directory does not exist: {parent}")
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+
+    # Import after --quick is in the environment (modules read it lazily,
+    # but keep the ordering obvious).
+    from benchmarks import (
+        bench_c_scaling,
+        bench_fused_first_order,
+        bench_hessian_diag,
+        bench_individual,
+        bench_kernels,
+        bench_optimizers,
+        bench_overhead,
+        bench_roofline,
+    )
+
+    all_benches = {
+        "fig3": bench_individual.main,
+        "fig6": bench_overhead.main,
+        "fig7": bench_optimizers.main,
+        "fig8": bench_c_scaling.main,
+        "fig9": bench_hessian_diag.main,
+        "kernels": bench_kernels.main,
+        "fused": bench_fused_first_order.main,
+        "roofline": bench_roofline.main,
+    }
+
+    which = args.which or list(all_benches)
+    unknown = [w for w in which if w not in all_benches]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; "
+                 f"choose from {sorted(all_benches)}")
     print("name,us_per_call,derived")
     for name in which:
-        ALL[name]()
+        all_benches[name]()
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(common.ROWS, f, indent=2)
+        print(f"# wrote {len(common.ROWS)} rows to {args.json_path}")
 
 
 if __name__ == "__main__":

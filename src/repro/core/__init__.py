@@ -21,12 +21,14 @@ from .extensions import (
     DiagHessian,
     Extension,
     ExtensionConfig,
+    FusedMask,
     KFAC,
     KFLR,
     KFRA,
     SecondMoment,
     Variance,
     by_name,
+    first_order_mask,
 )
 from .loss_hessian import CrossEntropyLoss, MSELoss
 from .module import (
@@ -48,5 +50,5 @@ from .module import (
     per_sample_l2,
     per_sample_sq_sum,
 )
-from .engine import Results, loss_and_grad, run
+from .engine import Results, SweepPlan, loss_and_grad, plan_sweeps, run
 from . import kron, oracle

@@ -33,10 +33,64 @@ from typing import Any, Dict, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .extensions import Extension, ExtensionConfig, sweeps_needed
+from .extensions import (
+    Extension,
+    ExtensionConfig,
+    FusedMask,
+    first_order_mask,
+    sweeps_needed,
+)
 from .module import Module
 
-_FIRST_ORDER = {"batch_grad", "batch_l2", "second_moment", "variance"}
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """Static per-call sweep plan, decided once from the extension set.
+
+    ``fused_mask`` is the fused first-order kernel's extension mask — the
+    reductions the kernel emits for this extension set; ``fused_active``
+    says whether the config actually routes through it (kernels on AND
+    fused on).  Together they make the paper's "K quantities, one backward
+    pass" claim explicit and inspectable (``plan_sweeps(...)`` is public
+    for tests/benchmarks).
+
+    The plan is extension-level *intent*: layer stat hooks re-derive the
+    same mask (``first_order_mask`` is pure) but may specialize on tape
+    shapes the plan cannot see — rank-1 (R==1) layers skip the fused
+    launch for the cheaper closed forms (see ``dense_first_order_stats``).
+    """
+
+    names: frozenset
+    sweeps: frozenset
+    first_exts: tuple
+    kron_exts: tuple
+    fused_mask: FusedMask
+    fused_active: bool
+
+    def describe(self) -> str:
+        passes = 1 + sum(s in self.sweeps
+                         for s in ("ggn_exact", "ggn_mc", "kfra", "hess"))
+        fused = [k for k in ("l2", "moment", "dot")
+                 if getattr(self.fused_mask, k)]
+        lane = fused if self.fused_active and fused else None
+        return (f"sweeps={sorted(self.sweeps) or ['first']} "
+                f"passes={passes} fused_first_order={lane}")
+
+
+def plan_sweeps(extensions: Sequence[Extension],
+                cfg: Optional[ExtensionConfig] = None) -> SweepPlan:
+    """Build the static sweep plan for a set of requested extensions."""
+    cfg = cfg or ExtensionConfig()
+    first_exts = tuple(e for e in extensions if e.sweep == "first")
+    return SweepPlan(
+        names=frozenset(e.name for e in extensions),
+        sweeps=frozenset(sweeps_needed(extensions)),
+        first_exts=first_exts,
+        # KFAC/KFLR A-factors are harvested during the first sweep:
+        kron_exts=tuple(e for e in extensions if e.name in ("kfac", "kflr")),
+        fused_mask=first_order_mask(first_exts),
+        fused_active=cfg.use_kernels and cfg.use_fused,
+    )
 
 
 @dataclasses.dataclass
@@ -98,25 +152,25 @@ def run(
     rng: Optional[jax.Array] = None,
 ) -> Results:
     cfg = cfg or ExtensionConfig()
-    sweeps = sweeps_needed(extensions)
-    first_exts = tuple(
-        e for e in extensions if e.sweep == "first"
-    )
-    # KFAC/KFLR A-factors are harvested during the first sweep:
-    kron_exts = tuple(e for e in extensions if e.name in ("kfac", "kflr"))
+    plan = plan_sweeps(extensions, cfg)
+    sweeps = plan.sweeps
+    first_exts, kron_exts = plan.first_exts, plan.kron_exts
 
     # ---- forward ----------------------------------------------------------
     z, tape = model.forward_tape(params, inputs)
     loss_val = loss.value(z, targets)
 
     # ---- first-order sweep -------------------------------------------------
+    # Each layer's stat hook recomputes plan.fused_mask from `first_exts`
+    # (the mapping is pure), so with cfg.use_kernels the whole sweep is one
+    # fused kernel launch per parameterized layer.
     g = loss.grad(z, targets)
     g_in, grads, stats = model.backward(
         params, tape, g, first_exts + kron_exts, cfg
     )
 
     ext: Dict[str, Any] = {}
-    names = {e.name for e in extensions}
+    names = plan.names
     if "batch_grad" in names:
         ext["batch_grad"] = _merge_stat_trees(stats, "batch_grad")
     if "batch_l2" in names:

@@ -68,6 +68,39 @@ def sweeps_needed(extensions) -> set:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedMask:
+    """Static extension mask for the fused first-order kernel.
+
+    Maps 1:1 onto the fused kernel's outputs: ``l2`` ↔ BatchL2, ``moment`` ↔
+    SecondMoment/Variance (both reduce the summed squared gradient), ``dot``
+    ↔ BatchDot.  An unset flag means that output is never allocated or
+    computed inside the kernel.
+    """
+
+    l2: bool = False
+    moment: bool = False
+    dot: bool = False
+
+    def any(self) -> bool:
+        return self.l2 or self.moment or self.dot
+
+    def wants(self):
+        """Kwargs for ``kernels.ops.fused_first_order``."""
+        return dict(want_l2=self.l2, want_moment=self.moment,
+                    want_dot=self.dot)
+
+
+def first_order_mask(exts_or_names) -> FusedMask:
+    """Fused-kernel mask for a set of extensions (or extension names)."""
+    names = {e if isinstance(e, str) else e.name for e in exts_or_names}
+    return FusedMask(
+        l2="batch_l2" in names,
+        moment=bool(names & {"second_moment", "variance"}),
+        dot="batch_dot" in names,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
 class ExtensionConfig:
     """Knobs shared by the engine's sweeps."""
 
@@ -76,3 +109,9 @@ class ExtensionConfig:
     # When True, first-order moment formulas route through the Pallas kernels
     # in repro.kernels (interpret=True on CPU); pure-jnp einsums otherwise.
     use_kernels: bool = False
+    # With use_kernels=True: route all requested first-order reductions
+    # through ONE fused kernel launch per layer (the default).  False falls
+    # back to the seed's per-extension path (a separate kernel or einsum
+    # per statistic) — kept as the baseline the fused path is benchmarked
+    # against.
+    use_fused: bool = True

@@ -35,7 +35,7 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .extensions import ExtensionConfig
+from .extensions import ExtensionConfig, FusedMask, first_order_mask
 
 
 def _f32(x):
@@ -143,30 +143,58 @@ def dense_first_order_stats(A, B, exts, cfg: ExtensionConfig, bias: bool):
 
     A: [N, R, a] inputs, B: [N, R, b] output cotangents (already / m).
     Returns ``{ext_name: {'w': ..., 'b': ...}}``.
+
+    With ``cfg.use_kernels`` (and ``cfg.use_fused``, the default) every
+    requested weight reduction — batch_l2, summed squared gradient, pairwise
+    dots — comes out of ONE fused Pallas launch over (A, B); the static
+    :class:`~repro.core.extensions.FusedMask` selects the outputs.  With
+    ``use_fused=False`` each statistic runs its own legacy kernel (the
+    benchmark baseline).  Bias stats are cheap row-sums and stay in jnp.
     """
     names = {e.name for e in exts}
+    mask = first_order_mask(names)
     out = {}
     Af, Bf = _f32(A), _f32(B)
+    # For R==1 every statistic has a cheaper rank-1 specialization than a
+    # fused launch that materializes G[n]=a_n b_nᵀ: l2 is Σa²·Σb²
+    # (O(N(a+b))), dot is (AAᵀ)∘(BBᵀ) (O(N²(a+b))), and the moment is the
+    # single (A∘A)ᵀ(B∘B) matmul — per_sample_sq_sum routes it to the
+    # dedicated sq_matmul kernel below.  Skip the fused kernel entirely.
+    rank1 = A.shape[1] == 1
+    kmask = FusedMask() if rank1 else mask
+    fused = None
+    if cfg.use_kernels and cfg.use_fused and kmask.any():
+        from repro.kernels import ops as kops
+
+        fused = kops.fused_first_order(Af, Bf, **kmask.wants())
     if "batch_grad" in names:
         d = {"w": jnp.einsum("nra,nrb->nab", Af, Bf)}
         if bias:
             d["b"] = jnp.sum(Bf, axis=1)
         out["batch_grad"] = d
-    if "second_moment" in names or "variance" in names:
-        d = {"w": per_sample_sq_sum(A, B, use_kernels=cfg.use_kernels)}
+    if mask.moment:
+        w = (fused["moment"] if fused is not None and kmask.moment
+             else per_sample_sq_sum(A, B, use_kernels=cfg.use_kernels))
+        d = {"w": w}
         if bias:
             bsum = jnp.sum(Bf, axis=1)
             d["b"] = jnp.sum(bsum * bsum, axis=0)
         out["_sum_grad2"] = d
-    if "batch_l2" in names:
-        l2w = per_sample_l2(A, B, use_kernels=cfg.use_kernels)
+    if mask.l2:
+        # per_sample_l2 short-circuits to the rank-1 closed form when R==1.
+        l2w = (fused["l2"] if fused is not None and kmask.l2
+               else per_sample_l2(A, B, use_kernels=cfg.use_kernels))
         if bias:
             bsum = jnp.sum(Bf, axis=1)
             out["batch_l2"] = {"w": l2w, "b": jnp.sum(bsum * bsum, -1)}
         else:
             out["batch_l2"] = {"w": l2w}
-    if "batch_dot" in names:
-        dw = per_sample_dots(A, B)
+    if mask.dot:
+        # Non-fused fallback is the pure-jnp Gram einsum: no standalone dot
+        # kernel ever existed, so that IS the per-extension baseline (and
+        # for R==1 it reduces to the cheap (AAᵀ)∘(BBᵀ) form).
+        dw = (fused["dot"] if fused is not None and kmask.dot
+              else per_sample_dots(A, B))
         if bias:
             bsum = jnp.sum(Bf, axis=1)
             out["batch_dot"] = {"w": dw, "b": bsum @ bsum.T}

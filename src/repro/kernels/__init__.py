@@ -1,4 +1,14 @@
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_first_order import fused_first_order_pallas
 from repro.kernels.wkv import wkv_pallas
-from repro.kernels.ops import batch_l2, ggn_diag, per_sample_moment, sq_matmul
+from repro.kernels.ops import (
+    batch_l2,
+    cache_stats,
+    dispatch,
+    fused_first_order,
+    ggn_diag,
+    per_sample_moment,
+    registered,
+    sq_matmul,
+)

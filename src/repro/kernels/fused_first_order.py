@@ -1,0 +1,132 @@
+"""Fused first-order statistics Pallas kernel (one pass, K reductions).
+
+BackPACK's economics (paper §2.2): every first-order quantity — per-sample
+gradient L2 norms, the summed squared gradient (second moment / variance),
+pairwise gradient dots — is a cheap reduction of the SAME ``(input,
+grad_out)`` pair the batch gradient already consumes.  The seed engine still
+paid one kernel launch (and one HBM read of A and B) *per statistic*; this
+kernel forms each per-sample gradient tile
+
+    G[n] = A_nᵀ B_n        (on the MXU, one [N, ba, bb] batch per tile pair)
+
+exactly once per ``(a, b)`` feature-tile pair and emits every *requested*
+reduction from the in-register tile:
+
+    moment[a, b]  = Σ_n  G[n]∘G[n]          (second moment / variance)
+    l2[n]         = Σ_ab G[n]∘G[n]          (per-sample gradient norms)
+    dot[n, m]     = Σ_ab G[n]∘G[m]          (pairwise Gram / batch_dot)
+
+The extension mask (``want_l2 / want_moment / want_dot``) is static: an
+unrequested output has no ref, no VMEM footprint and no FLOPs — ``K`` stat
+sweeps collapse into 1 with marginal cost per extra statistic.
+
+A leading *group* axis ``E`` batches independent problems through one launch
+(E=1 for Dense/attention projections/conv-unfold; E=n_experts for MoE
+``BatchedDense``, where capacity slots are the sample units).
+
+Shapes:  A: [E, N, R, a], B: [E, N, R, b]   (R = summed sequence/patch axis)
+Outputs: l2 [E, N] · moment [E, a, b] · dot [E, N, N], all float32.
+
+Tiling: grid (E, a/ba, b/bb) — E parallel; the (i, j) feature tiles are
+``arbitrary`` because l2/dot accumulate across them (init at (0, 0)).  The
+moment tile is written exactly once per (i, j), no accumulation.  G squared
+is computed once and shared between the moment and l2 reductions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output slots in kernel-ref order (static mask selects a subset).
+OUTPUTS = ("l2", "moment", "dot")
+
+
+def _make_kernel(want_l2, want_moment, want_dot):
+    def kernel(a_ref, b_ref, *o_refs):
+        i, j = pl.program_id(1), pl.program_id(2)
+        refs = iter(o_refs)
+        l2_ref = next(refs) if want_l2 else None
+        mom_ref = next(refs) if want_moment else None
+        dot_ref = next(refs) if want_dot else None
+
+        a = a_ref[0].astype(jnp.float32)  # [N, R, ba]
+        b = b_ref[0].astype(jnp.float32)  # [N, R, bb]
+        # G[n] = A_nᵀ B_n for this feature-tile pair: batch over n, contract r.
+        G = jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )  # [N, ba, bb]
+
+        if want_l2 or want_moment:
+            G2 = G * G
+        if want_moment:
+            mom_ref[0] = jnp.sum(G2, axis=0)
+        if want_l2:
+            @pl.when((i == 0) & (j == 0))
+            def _init_l2():
+                l2_ref[...] = jnp.zeros_like(l2_ref)
+
+            l2_ref[0] += jnp.sum(G2, axis=(1, 2))
+        if want_dot:
+            @pl.when((i == 0) & (j == 0))
+            def _init_dot():
+                dot_ref[...] = jnp.zeros_like(dot_ref)
+
+            # dot[n, m] += ⟨G[n], G[m]⟩ — contract both feature axes.
+            dot_ref[0] += jax.lax.dot_general(
+                G, G, (((1, 2), (1, 2)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+    return kernel
+
+
+def fused_first_order_pallas(A, B, *, want_l2=True, want_moment=False,
+                             want_dot=False, block_a=128, block_b=128,
+                             interpret=True):
+    """A: [E, N, R, a], B: [E, N, R, b] → dict of requested float32 stats.
+
+    Caller is responsible for padding (a, b) to block multiples and (N, R)
+    to sublane multiples — see the ``fused_first_order`` registry entry in
+    :mod:`repro.kernels.ops`, which owns that policy.
+    """
+    if not (want_l2 or want_moment or want_dot):
+        raise ValueError("fused_first_order: empty extension mask")
+    e, n, r, a = A.shape
+    b = B.shape[-1]
+    grid = (e, pl.cdiv(a, block_a), pl.cdiv(b, block_b))
+
+    out_shapes, out_specs, names = [], [], []
+    if want_l2:
+        out_shapes.append(jax.ShapeDtypeStruct((e, n), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, n), lambda k, i, j: (k, 0)))
+        names.append("l2")
+    if want_moment:
+        out_shapes.append(jax.ShapeDtypeStruct((e, a, b), jnp.float32))
+        out_specs.append(
+            pl.BlockSpec((1, block_a, block_b), lambda k, i, j: (k, i, j)))
+        names.append("moment")
+    if want_dot:
+        out_shapes.append(jax.ShapeDtypeStruct((e, n, n), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, n, n), lambda k, i, j: (k, 0, 0)))
+        names.append("dot")
+
+    outs = pl.pallas_call(
+        _make_kernel(want_l2, want_moment, want_dot),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, r, block_a), lambda k, i, j: (k, 0, 0, i)),
+            pl.BlockSpec((1, n, r, block_b), lambda k, i, j: (k, 0, 0, j)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary",
+                                             "arbitrary"))
+        ) if not interpret else {},
+        interpret=interpret,
+    )(A, B)
+    if len(names) == 1:
+        outs = (outs,) if not isinstance(outs, (tuple, list)) else outs
+    return dict(zip(names, outs))

@@ -1,25 +1,136 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Kernel dispatch registry — the single entry point for reduction kernels.
 
-Handles zero-padding to block multiples (zeros contribute nothing to any of
-the four reductions, so padding is exact) and backend selection:
-``interpret=True`` on CPU (kernel body executed in Python — correctness
-path for this container), compiled Mosaic on TPU.
+Every BackPACK *reduction* kernel (the first-order/curvature statistics) is
+published through one :class:`KernelSpec` table instead of ad-hoc
+per-kernel wrappers.  (The sequence-mixing kernels — flash attention, WKV —
+keep their own entry points in their modules: their call signatures are
+layer-shaped, not reduction-shaped.)  The registry owns, in one place:
+
+* **Padding** to block multiples.  Feature axes pad to the (shape-clamped)
+  block size, sample/sequence axes to sublane multiples of 8.  Zeros are
+  exact for every reduction here (they contribute nothing to a sum of
+  products), so wrappers pad inputs and slice outputs.
+* **Backend selection** — ``interpret=True`` on CPU (kernel bodies run under
+  the Pallas interpreter: the correctness path for this container), compiled
+  Mosaic on TPU.  Decided once in :func:`_interpret`, injected into every
+  wrapper.
+* **Jit caching** — :func:`dispatch` memoizes one jitted callable per
+  ``(kernel, static options, backend)`` configuration; ``jax.jit``'s own
+  shape-keyed cache then handles per-shape retracing, so hot training
+  loops never re-trace and :func:`cache_stats` reports what has been set
+  up.
+
+Registered kernels (see :func:`registered`):
+
+``sq_matmul``          (A∘A)ᵀ(B∘B) — rank-1 second moment (App. A.1)
+``per_sample_moment``  Σ_n (A_nᵀB_n)∘² — sequence second moment
+``batch_l2``           per-sample gradient norms via the Gram trick
+``ggn_diag``           GGN diagonal from backpropagated factors (Eq. 19/22)
+``fused_first_order``  ONE pass emitting {l2, moment, dot} under a static
+                       extension mask — the mask maps 1:1 onto the
+                       first-order extensions: ``want_l2`` ↔ BatchL2,
+                       ``want_moment`` ↔ SecondMoment/Variance, ``want_dot``
+                       ↔ BatchDot.  Unrequested outputs cost nothing.
+                       A leading group axis batches MoE experts.
+
+Adding a kernel: write the Pallas body in its own module, then register a
+wrapper here with ``@register("name", ref=ref.name)``; the wrapper receives
+``interpret=`` from the registry and owns only its pad/slice policy.  Public
+module-level functions (``ops.batch_l2`` etc.) stay thin aliases over
+:func:`dispatch`.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ref
 from repro.kernels.batch_l2 import batch_l2_pallas
+from repro.kernels.fused_first_order import fused_first_order_pallas
 from repro.kernels.ggn_diag import ggn_diag_pallas
 from repro.kernels.per_sample_moment import per_sample_moment_pallas
 from repro.kernels.sq_matmul import sq_matmul_pallas
 
 
-def _interpret():
+# ---------------------------------------------------------------------------
+# registry core
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered kernel: padded wrapper + its pure-jnp oracle."""
+
+    name: str
+    wrapper: Callable  # (*arrays, interpret=..., **static) -> outputs
+    ref: Optional[Callable]
+    description: str
+
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+_JIT_CACHE: Dict[Tuple, Callable] = {}
+
+
+def register(name: str, *, ref: Optional[Callable] = None,
+             description: str = ""):
+    """Decorator adding a padded kernel wrapper to the dispatch table."""
+
+    def deco(fn):
+        _REGISTRY[name] = KernelSpec(
+            name, fn, ref, description or (fn.__doc__ or "").strip())
+        return fn
+
+    return deco
+
+
+def registered() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_spec(name: str) -> KernelSpec:
+    return _REGISTRY[name]
+
+
+def _interpret() -> bool:
+    """CPU → Pallas interpreter (correctness path); TPU → compiled Mosaic."""
     return jax.default_backend() == "cpu"
+
+
+def dispatch(name: str, *args, **static) -> Any:
+    """Run a registered kernel through the jit cache.
+
+    One jitted callable per (kernel, static opts, backend) config;
+    per-shape compilation caching is jax.jit's own.
+    """
+    spec = _REGISTRY[name]
+    interpret = _interpret()
+    key = (name, tuple(sorted(static.items())), interpret)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(partial(spec.wrapper, interpret=interpret, **static))
+        _JIT_CACHE[key] = fn
+    return fn(*args)
+
+
+def cache_stats() -> Dict[str, int]:
+    """Per-kernel count of cached jit configurations (plus the total)."""
+    out: Dict[str, int] = {"total": len(_JIT_CACHE)}
+    for key in _JIT_CACHE:
+        out[key[0]] = out.get(key[0], 0) + 1
+    return out
+
+
+def clear_cache() -> None:
+    _JIT_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# shared padding policy
+# ---------------------------------------------------------------------------
 
 
 def _pad_to(x, axis, mult):
@@ -31,44 +142,147 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-@partial(jax.jit, static_argnames=("block_a", "block_b", "block_n"))
-def sq_matmul(A, B, block_a=128, block_b=128, block_n=256):
+def _clamp_block(block, dim):
+    """Shrink an oversized feature block to the (≥8) padded dimension."""
+    return min(block, max(dim, 8))
+
+
+def _auto_block(dim, cap):
+    """Largest even split of ``dim`` into ≤``cap``-wide tiles, sublane-rounded.
+
+    Plain ``min(cap, dim)`` pads dims just above a cap multiple by up to
+    ~2x (e.g. 520 → 1024 with cap 512); splitting evenly first keeps the
+    big-tile amortization with ≤ one sublane row of padding per tile
+    (520 → 2×264).
+    """
+    if dim <= 8:
+        return 8
+    n_tiles = -(-dim // cap)
+    return min(cap, -(-(-(-dim // n_tiles)) // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+# registered wrappers
+# ---------------------------------------------------------------------------
+
+
+@register("sq_matmul", ref=ref.sq_matmul)
+def _sq_matmul(A, B, *, block_a=128, block_b=128, block_n=256,
+               interpret=True):
+    """C = (A∘A)ᵀ(B∘B): A [N, a], B [N, b] → [a, b]."""
     a, b = A.shape[1], B.shape[1]
-    ba, bb = min(block_a, max(a, 8)), min(block_b, max(b, 8))
+    ba, bb = _clamp_block(block_a, a), _clamp_block(block_b, b)
     A2 = _pad_to(_pad_to(A, 1, ba), 0, 8)
     B2 = _pad_to(_pad_to(B, 1, bb), 0, 8)
     bn = min(block_n, A2.shape[0])
     out = sq_matmul_pallas(A2, B2, block_a=ba, block_b=bb, block_n=bn,
-                           interpret=_interpret())
+                           interpret=interpret)
     return out[:a, :b]
 
 
-@partial(jax.jit, static_argnames=("block_a", "block_b"))
-def per_sample_moment(A, B, block_a=128, block_b=128):
+@register("per_sample_moment", ref=ref.per_sample_moment)
+def _per_sample_moment(A, B, *, block_a=128, block_b=128, interpret=True):
+    """M = Σ_n (A_nᵀB_n)∘²: A [N, R, a], B [N, R, b] → [a, b]."""
     a, b = A.shape[-1], B.shape[-1]
-    ba, bb = min(block_a, max(a, 8)), min(block_b, max(b, 8))
+    ba, bb = _clamp_block(block_a, a), _clamp_block(block_b, b)
     A2 = _pad_to(_pad_to(A, 2, ba), 1, 8)
     B2 = _pad_to(_pad_to(B, 2, bb), 1, 8)
     out = per_sample_moment_pallas(A2, B2, block_a=ba, block_b=bb,
-                                   interpret=_interpret())
+                                   interpret=interpret)
     return out[:a, :b]
 
 
-@partial(jax.jit, static_argnames=("block_r",))
-def batch_l2(A, B, block_r=128):
+@register("batch_l2", ref=ref.batch_l2)
+def _batch_l2(A, B, *, block_r=128, interpret=True):
+    """l2[n] = ‖A_nᵀB_n‖²: A [N, R, a], B [N, R, b] → [N]."""
     r = A.shape[1]
-    br = min(block_r, max(r, 8))
+    br = _clamp_block(block_r, r)
     A2 = _pad_to(A, 1, br)
     B2 = _pad_to(B, 1, br)
-    return batch_l2_pallas(A2, B2, block_r=br, interpret=_interpret())
+    return batch_l2_pallas(A2, B2, block_r=br, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("block_a", "block_b"))
-def ggn_diag(A, S, block_a=128, block_b=128):
+@register("ggn_diag", ref=ref.ggn_diag)
+def _ggn_diag(A, S, *, block_a=128, block_b=128, interpret=True):
+    """GGN diag: A [N, R, a], S [C, N, R, b] → [a, b]."""
     a, b = A.shape[-1], S.shape[-1]
-    ba, bb = min(block_a, max(a, 8)), min(block_b, max(b, 8))
+    ba, bb = _clamp_block(block_a, a), _clamp_block(block_b, b)
     A2 = _pad_to(_pad_to(A, 2, ba), 1, 8)
     S2 = _pad_to(_pad_to(S, 3, bb), 2, 8)
     out = ggn_diag_pallas(A2, S2, block_a=ba, block_b=bb,
-                          interpret=_interpret())
+                          interpret=interpret)
     return out[:a, :b]
+
+
+@register("fused_first_order", ref=ref.fused_first_order)
+def _fused_first_order(A, B, *, want_l2=True, want_moment=False,
+                       want_dot=False, block_a=None, block_b=None,
+                       interpret=True):
+    """One pass over (A, B) emitting the masked first-order stats.
+
+    A: [E, N, R, a], B: [E, N, R, b] → dict of
+    l2 [E, N] / moment [E, a, b] / dot [E, N, N] (requested keys only).
+    Zero-padding N and R is exact; padded l2 rows and dot rows/cols are
+    sliced off, moment is unaffected.
+
+    Default blocks are backend-aware (``None`` = auto): MXU-native 128 under
+    Mosaic; 512 under the CPU interpreter, where per-grid-step overhead
+    dominates and bigger tiles amortize it.
+    """
+    e, n, r, a = A.shape
+    b = B.shape[-1]
+    cap = 512 if interpret else 128
+    ba = (_clamp_block(block_a, a) if block_a is not None
+          else _auto_block(a, cap))
+    bb = (_clamp_block(block_b, b) if block_b is not None
+          else _auto_block(b, cap))
+    A2 = _pad_to(_pad_to(_pad_to(A, 3, ba), 2, 8), 1, 8)
+    B2 = _pad_to(_pad_to(_pad_to(B, 3, bb), 2, 8), 1, 8)
+    out = fused_first_order_pallas(
+        A2, B2, want_l2=want_l2, want_moment=want_moment, want_dot=want_dot,
+        block_a=ba, block_b=bb, interpret=interpret)
+    if "l2" in out:
+        out["l2"] = out["l2"][:, :n]
+    if "moment" in out:
+        out["moment"] = out["moment"][:, :a, :b]
+    if "dot" in out:
+        out["dot"] = out["dot"][:, :n, :n]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public API (thin aliases over dispatch)
+# ---------------------------------------------------------------------------
+
+
+def sq_matmul(A, B, block_a=128, block_b=128, block_n=256):
+    return dispatch("sq_matmul", A, B, block_a=block_a, block_b=block_b,
+                    block_n=block_n)
+
+
+def per_sample_moment(A, B, block_a=128, block_b=128):
+    return dispatch("per_sample_moment", A, B, block_a=block_a,
+                    block_b=block_b)
+
+
+def batch_l2(A, B, block_r=128):
+    return dispatch("batch_l2", A, B, block_r=block_r)
+
+
+def ggn_diag(A, S, block_a=128, block_b=128):
+    return dispatch("ggn_diag", A, S, block_a=block_a, block_b=block_b)
+
+
+def fused_first_order(A, B, want_l2=True, want_moment=False, want_dot=False,
+                      block_a=None, block_b=None):
+    """Fused first-order stats; A/B may be [N, R, a] (a leading group axis
+    of 1 is added and stripped) or [E, N, R, a]."""
+    squeeze = A.ndim == 3
+    if squeeze:
+        A, B = A[None], B[None]
+    out = dispatch("fused_first_order", A, B, want_l2=want_l2,
+                   want_moment=want_moment, want_dot=want_dot,
+                   block_a=block_a, block_b=block_b)
+    if squeeze:
+        out = {k: v[0] for k, v in out.items()}
+    return out

@@ -30,3 +30,29 @@ def ggn_diag(A, S):
     Af, Sf = A.astype(jnp.float32), S.astype(jnp.float32)
     t = jnp.einsum("nra,cnrb->cnab", Af, Sf)
     return jnp.sum(t * t, axis=(0, 1))
+
+
+def batch_dot(A, B):
+    """D[n,m] = ⟨g_n, g_m⟩ for g = A_nᵀB_n — pairwise Gram trick."""
+    Af, Bf = A.astype(jnp.float32), B.astype(jnp.float32)
+    ga = jnp.einsum("nra,msa->nmrs", Af, Af)
+    gb = jnp.einsum("nrb,msb->nmrs", Bf, Bf)
+    return jnp.sum(ga * gb, axis=(2, 3))
+
+
+def fused_first_order(A, B, want_l2=True, want_moment=False, want_dot=False):
+    """Oracle for the fused kernel: materialize G[n] = A_nᵀB_n, reduce.
+
+    A: [E, N, R, a], B: [E, N, R, b] → dict of requested stats
+    (l2 [E, N] · moment [E, a, b] · dot [E, N, N]), all float32.
+    """
+    Af, Bf = A.astype(jnp.float32), B.astype(jnp.float32)
+    g = jnp.einsum("enra,enrb->enab", Af, Bf)
+    out = {}
+    if want_l2:
+        out["l2"] = jnp.sum(g * g, axis=(2, 3))
+    if want_moment:
+        out["moment"] = jnp.sum(g * g, axis=1)
+    if want_dot:
+        out["dot"] = jnp.einsum("enab,emab->enm", g, g)
+    return out

@@ -10,20 +10,28 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    """Version-compat mesh constructor.
+
+    ``jax.sharding.AxisType`` landed after jax 0.4.x; on older versions
+    (e.g. the pinned 0.4.37 CI environment) every axis is implicitly Auto,
+    so dropping the kwarg is behavior-preserving.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _mesh(tuple(shape), tuple(axes))
 
 
 # v5e-class hardware constants for the roofline (per chip)

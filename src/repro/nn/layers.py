@@ -113,7 +113,21 @@ class BatchedDense(Module):
         names = {e.name for e in exts}
         if "second_moment" in names or "variance" in names:
             # token-level (capacity slots are the sample units for experts)
-            stats["_sum_grad2"] = {"w": jnp.einsum("eca,ecb->eab", Af ** 2, Bf ** 2)}
+            if cfg.use_kernels and cfg.use_fused:
+                # Fused kernel with experts as the group axis ([E, cap, 1, d]):
+                # unlike the einsum below, the squares happen in-register on
+                # the way out of the MXU — A², B² are never materialized in
+                # HBM — and all E experts ride one launch.  (Deliberate even
+                # though the synthetic R=1 axis means no multi-stat fusion:
+                # there is no batched sq_matmul kernel.)
+                from repro.kernels import ops as kops
+
+                stats["_sum_grad2"] = {"w": kops.fused_first_order(
+                    Af[:, :, None, :], Bf[:, :, None, :],
+                    want_l2=False, want_moment=True)["moment"]}
+            else:
+                stats["_sum_grad2"] = {
+                    "w": jnp.einsum("eca,ecb->eab", Af ** 2, Bf ** 2)}
         if "kfac" in names or "kflr" in names:
             cap = x.shape[1]
             stats["_kron_a"] = {

@@ -1,0 +1,133 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The pinned CI environment installs the real hypothesis (see
+requirements-dev.txt); this container image does not ship it and nothing may
+be pip-installed, so ``conftest.py`` registers this shim instead of letting
+the property-test modules fail collection.  It implements the tiny slice of
+the API the test-suite uses — ``given``, ``settings`` and the ``integers`` /
+``floats`` / ``sampled_from`` / ``booleans`` strategies — by drawing
+``max_examples`` pseudo-random examples from a PRNG seeded with the test
+name, so runs are reproducible and failures print the falsifying example.
+No shrinking, no database: a fallback, not a replacement.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred, _tries=100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+
+        return _Strategy(draw)
+
+
+def integers(min_value=0, max_value=2 ** 31 - 1):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=8):
+    return _Strategy(lambda rng: [
+        elements.draw(rng)
+        for _ in range(rng.randint(min_size, max_size))
+    ])
+
+
+class settings:
+    """Decorator stub: records max_examples, ignores deadline/profiles."""
+
+    def __init__(self, max_examples=10, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError(
+            "hypothesis fallback supports keyword strategies only")
+
+    def deco(fn):
+        pre = getattr(fn, "_fallback_settings", None)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None) or pre
+            n = cfg.max_examples if cfg is not None else 10
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"{fn.__qualname__}: falsifying example "
+                        f"#{i + 1}/{n}: {drawn}"
+                    ) from exc
+
+        # pytest follows __wrapped__ to the original signature and would
+        # treat the strategy kwargs as missing fixtures — hide it.
+        del wrapper.__wrapped__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register this shim as `hypothesis` (+ `.strategies`) in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None)
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans", "just",
+                 "tuples", "lists"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+    return mod

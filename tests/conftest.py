@@ -2,11 +2,30 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401  (the real package, when installed)
+except ModuleNotFoundError:
+    # Container images without hypothesis (nothing may be pip-installed
+    # there) get the deterministic shim; the pinned CI env has the real one.
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
 
 import jax
 import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests (subprocess sweeps, full-suite lane only)")
+    config.addinivalue_line(
+        "markers",
+        "sharding: multi-device subprocess tests (need spare RAM/CPU)")
 
 
 @pytest.fixture(autouse=True, scope="module")

@@ -104,6 +104,8 @@ def _run_sub(arch, shape):
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
+@pytest.mark.sharding
 @pytest.mark.parametrize("arch", ["stablelm-1.6b", "granite-moe-1b-a400m",
                                   "rwkv6-3b"])
 def test_sharded_train_step_executes(arch):
@@ -111,6 +113,8 @@ def test_sharded_train_step_executes(arch):
     assert res["ok"] and res["loss"] > 0
 
 
+@pytest.mark.slow
+@pytest.mark.sharding
 def test_sharded_decode_compiles():
     res = _run_sub("stablelm-1.6b", "decode_32k")
     assert res["ok"]
