@@ -1,16 +1,49 @@
-"""Fig. 9: Hessian diagonal vs GGN diagonal once a non-piecewise-linear
-activation (sigmoid) appears — residual ± factors make DiagHessian an
-order of magnitude more expensive."""
+"""Fig. 9 + fused curvature sweep: second-order cost structure.
+
+Two sections:
+
+* ``fig9/...`` — the paper's Fig. 9: Hessian diagonal vs GGN diagonal once
+  a non-piecewise-linear activation (sigmoid) appears — residual ± factors
+  make DiagHessian an order of magnitude more expensive.
+
+* ``fused_second_order/...`` — the ISSUE-2 tentpole claim: with the fused
+  curvature kernel, computing {diag_ggn + kflr} together costs ≤ 1.5× of
+  diag_ggn alone (the B-factor rides the same kernel launch and the same
+  VMEM-resident S tile), where the per-extension baseline pays additively
+  (separate broadcast-einsum / kernel passes over the same (A, S) pair).
+  Lanes (interleaved min-of-k timing via ``time_group``):
+
+    fused/diag_only        DiagGGN,        use_kernels=True  (the 1× base)
+    fused/diag+kflr        DiagGGN + KFLR, use_kernels=True
+    fused/diag+kflr+trace  + GGNTrace — the third output is ~free
+    baseline/diag_only     DiagGGN,        per-extension jnp path
+    baseline/diag+kflr     DiagGGN + KFLR, per-extension jnp path
+
+  ``derived`` carries the ratio vs the same path's diag_only lane, plus
+  the ``plan_sweeps`` description of the fused curvature workload.  The
+  model is the paper's 2c2d conv net: its unfold gives R = 64 patch
+  positions per sample, so the fused kernel is genuinely on the timed
+  path (R==1 layers deliberately skip it for closed forms).
+"""
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import emit, time_fn
-from repro.configs.papernets import mlp
-from repro.core import CrossEntropyLoss, DiagGGN, DiagHessian, run
+from benchmarks.common import emit, time_fn, time_group
+from repro.configs.papernets import c2d2, mlp
+from repro.core import (
+    CrossEntropyLoss,
+    DiagGGN,
+    DiagHessian,
+    ExtensionConfig,
+    GGNTrace,
+    KFLR,
+    plan_sweeps,
+    run,
+)
 
 
-def main():
+def _fig9():
     loss = CrossEntropyLoss()
     for act, tag in (("relu", "relu"), ("sigmoid", "sigmoid")):
         model = mlp(n_classes=10, in_dim=32, hidden=(64, 48), act=act)
@@ -27,6 +60,41 @@ def main():
                                      extensions=(DiagHessian,)).ext)
         t_h = time_fn(h_fn, params)
         emit(f"fig9/diag_hessian/{tag}", t_h, f"x{t_h / t_ggn:.1f}_vs_ggn")
+
+
+def _fused_second_order():
+    loss = CrossEntropyLoss()
+    model = c2d2(n_classes=10, in_ch=1, img=8)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8, 8, 1))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+    fused_cfg = ExtensionConfig(use_kernels=True)
+    base_cfg = ExtensionConfig(use_kernels=False)
+
+    def lane(exts, cfg):
+        fn = jax.jit(lambda p: run(model, p, x, y, loss, extensions=exts,
+                                   cfg=cfg).ext)
+        return lambda: fn(params)
+
+    times = time_group({
+        "fused/diag_only": lane((DiagGGN,), fused_cfg),
+        "fused/diag+kflr": lane((DiagGGN, KFLR), fused_cfg),
+        "fused/diag+kflr+trace": lane((DiagGGN, KFLR, GGNTrace), fused_cfg),
+        "baseline/diag_only": lane((DiagGGN,), base_cfg),
+        "baseline/diag+kflr": lane((DiagGGN, KFLR), base_cfg),
+    })
+    plan = plan_sweeps((DiagGGN, KFLR), fused_cfg)
+    for name, t in times.items():
+        base = times[name.split("/")[0] + "/diag_only"]
+        note = f"ratio={t / base:.2f}"
+        if name == "fused/diag+kflr":
+            note += f";{plan.describe()}"
+        emit(f"fused_second_order/{name}", t, note)
+
+
+def main():
+    _fig9()
+    _fused_second_order()
 
 
 if __name__ == "__main__":

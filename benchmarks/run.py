@@ -9,7 +9,9 @@ smaller shapes where a benchmark defines them (currently ``fused``).
   fig6  extension overhead vs plain gradient             (paper Fig. 6)
   fig7  curvature optimizers vs SGD/Adam                 (paper Fig. 7/10/11)
   fig8  KFLR vs KFAC output-dimension scaling            (paper Fig. 8)
-  fig9  Hessian diag vs GGN diag with sigmoid            (paper Fig. 9)
+  fig9  Hessian diag vs GGN diag with sigmoid, plus the fused
+        second-order sweep vs per-extension baseline     (paper Fig. 9 /
+                                                          ISSUE 2 tentpole)
   kernels   Pallas kernels (interpret)                   (deliverable c)
   fused     fused first-order kernel vs per-extension    (ISSUE 1 tentpole)
   roofline  dry-run roofline table                       (deliverable g)

@@ -22,6 +22,8 @@ from .extensions import (
     Extension,
     ExtensionConfig,
     FusedMask,
+    FusedSecondMask,
+    GGNTrace,
     KFAC,
     KFLR,
     KFRA,
@@ -29,6 +31,7 @@ from .extensions import (
     Variance,
     by_name,
     first_order_mask,
+    second_order_mask,
 )
 from .loss_hessian import CrossEntropyLoss, MSELoss
 from .module import (

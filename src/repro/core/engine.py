@@ -37,7 +37,9 @@ from .extensions import (
     Extension,
     ExtensionConfig,
     FusedMask,
+    FusedSecondMask,
     first_order_mask,
+    second_order_mask,
     sweeps_needed,
 )
 from .module import Module
@@ -47,17 +49,19 @@ from .module import Module
 class SweepPlan:
     """Static per-call sweep plan, decided once from the extension set.
 
-    ``fused_mask`` is the fused first-order kernel's extension mask — the
-    reductions the kernel emits for this extension set; ``fused_active``
-    says whether the config actually routes through it (kernels on AND
-    fused on).  Together they make the paper's "K quantities, one backward
-    pass" claim explicit and inspectable (``plan_sweeps(...)`` is public
-    for tests/benchmarks).
+    ``fused_mask`` is the fused first-order kernel's extension mask and
+    ``fused_second_mask`` the fused curvature kernel's — the reductions
+    each kernel emits for this extension set; ``fused_active`` says whether
+    the config actually routes through them (kernels on AND fused on).
+    Together they make the paper's "K quantities, one backward pass" claim
+    explicit and inspectable (``plan_sweeps(...)`` is public for
+    tests/benchmarks).
 
     The plan is extension-level *intent*: layer stat hooks re-derive the
-    same mask (``first_order_mask`` is pure) but may specialize on tape
-    shapes the plan cannot see — rank-1 (R==1) layers skip the fused
-    launch for the cheaper closed forms (see ``dense_first_order_stats``).
+    same masks (``first_order_mask`` / ``second_order_mask`` are pure) but
+    may specialize on tape shapes the plan cannot see — rank-1 (R==1)
+    layers skip both fused launches for the cheaper closed forms (see
+    ``dense_first_order_stats`` / ``dense_curv_stats``).
     """
 
     names: frozenset
@@ -66,6 +70,7 @@ class SweepPlan:
     kron_exts: tuple
     fused_mask: FusedMask
     fused_active: bool
+    fused_second_mask: FusedSecondMask = FusedSecondMask()
 
     def describe(self) -> str:
         passes = 1 + sum(s in self.sweeps
@@ -73,8 +78,16 @@ class SweepPlan:
         fused = [k for k in ("l2", "moment", "dot")
                  if getattr(self.fused_mask, k)]
         lane = fused if self.fused_active and fused else None
+        # The second-order lane reports the *planned* kernel outputs for the
+        # extension set regardless of config (the curvature lane is what a
+        # plan is usually inspected for); `fused_active` says whether this
+        # config routes both lanes through the fused kernels.
+        second = [k for k in ("diag", "kron", "trace")
+                  if getattr(self.fused_second_mask, k)]
         return (f"sweeps={sorted(self.sweeps) or ['first']} "
-                f"passes={passes} fused_first_order={lane}")
+                f"passes={passes} fused_first_order={lane} "
+                f"fused_second_order={second or None} "
+                f"fused_active={self.fused_active}")
 
 
 def plan_sweeps(extensions: Sequence[Extension],
@@ -90,6 +103,7 @@ def plan_sweeps(extensions: Sequence[Extension],
         kron_exts=tuple(e for e in extensions if e.name in ("kfac", "kflr")),
         fused_mask=first_order_mask(first_exts),
         fused_active=cfg.use_kernels and cfg.use_fused,
+        fused_second_mask=second_order_mask(extensions),
     )
 
 
@@ -216,6 +230,8 @@ def run(
             ext["diag_ggn"] = _merge_stat_trees(curv, "diag_ggn")
         if "kflr" in names:
             ext["kflr"] = _combine_kron(curv, kron_a, "kflr")
+        if "ggn_trace" in names:
+            ext["ggn_trace"] = _merge_stat_trees(curv, "ggn_trace")
 
     if "ggn_mc" in sweeps:
         mc_exts = tuple(e for e in extensions if e.sweep == "ggn_mc")

@@ -42,6 +42,10 @@ KFLR = Extension("kflr", "ggn_exact")
 KFAC = Extension("kfac", "ggn_mc")
 KFRA = Extension("kfra", "kfra")
 DiagHessian = Extension("diag_hessian", "hess")
+# beyond-paper: per-sample GGN trace [N] — curvature-concentration telemetry
+# (which samples dominate the loss curvature); a marginal-cost output of the
+# fused second-order kernel.  Dense-shaped layers (Dense / Conv2d) only.
+GGNTrace = Extension("ggn_trace", "ggn_exact")
 
 ALL_EXTENSIONS = (
     BatchGrad,
@@ -55,6 +59,7 @@ ALL_EXTENSIONS = (
     KFAC,
     KFRA,
     DiagHessian,
+    GGNTrace,
 )
 _BY_NAME = {e.name: e for e in ALL_EXTENSIONS}
 
@@ -101,6 +106,45 @@ def first_order_mask(exts_or_names) -> FusedMask:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedSecondMask:
+    """Static extension mask for the fused second-order (curvature) kernel.
+
+    Maps 1:1 onto the fused kernel's outputs: ``diag`` ↔ DiagGGN/DiagGGNMC,
+    ``kron`` ↔ the KFLR/KFAC output-side B-factor, ``trace`` ↔ GGNTrace.
+    An unset flag means that output is never allocated or computed inside
+    the kernel.
+    """
+
+    diag: bool = False
+    kron: bool = False
+    trace: bool = False
+
+    def any(self) -> bool:
+        return self.diag or self.kron or self.trace
+
+    def wants(self):
+        """Kwargs for ``kernels.ops.fused_second_order``."""
+        return dict(want_diag=self.diag, want_kron=self.kron,
+                    want_trace=self.trace)
+
+
+def second_order_mask(exts_or_names) -> FusedSecondMask:
+    """Fused-curvature-kernel mask for a set of extensions (or names).
+
+    Pure, like :func:`first_order_mask`: the engine's plan and the layer
+    stat hooks derive the same mask independently.  Works per sweep — the
+    exact sweep's names ({diag_ggn, kflr, ggn_trace}) and the MC sweep's
+    ({diag_ggn_mc, kfac}) both land on the same kernel outputs.
+    """
+    names = {e if isinstance(e, str) else e.name for e in exts_or_names}
+    return FusedSecondMask(
+        diag=bool(names & {"diag_ggn", "diag_ggn_mc"}),
+        kron=bool(names & {"kflr", "kfac"}),
+        trace="ggn_trace" in names,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
 class ExtensionConfig:
     """Knobs shared by the engine's sweeps."""
 
@@ -109,9 +153,10 @@ class ExtensionConfig:
     # When True, first-order moment formulas route through the Pallas kernels
     # in repro.kernels (interpret=True on CPU); pure-jnp einsums otherwise.
     use_kernels: bool = False
-    # With use_kernels=True: route all requested first-order reductions
-    # through ONE fused kernel launch per layer (the default).  False falls
-    # back to the seed's per-extension path (a separate kernel or einsum
-    # per statistic) — kept as the baseline the fused path is benchmarked
-    # against.
+    # With use_kernels=True: route all requested reductions — first-order
+    # stats AND the curvature-sweep stats (GGN diag, Kronecker B-factors,
+    # GGN trace) — through ONE fused kernel launch per layer per sweep (the
+    # default).  False falls back to the seed's per-extension path (a
+    # separate kernel or einsum per statistic) — kept as the baseline the
+    # fused paths are benchmarked against.
     use_fused: bool = True

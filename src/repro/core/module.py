@@ -35,7 +35,13 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .extensions import ExtensionConfig, FusedMask, first_order_mask
+from .extensions import (
+    ExtensionConfig,
+    FusedMask,
+    FusedSecondMask,
+    first_order_mask,
+    second_order_mask,
+)
 
 
 def _f32(x):
@@ -214,26 +220,74 @@ def dense_curv_stats(A, S, exts, cfg: ExtensionConfig, bias: bool, ext_prefix):
     diag contribution: Σ_{c,n} (Σ_r A[n,r,i] S[c,n,r,j])∘²  (Eq. 19/22).
     Kron B factor: R · Σ_{c,n,r} S Sᵀ (Grosse–Martens spatial scaling; exact
     for R=1 where it reduces to App. A.2's B_KFLR/B_KFAC).
+    Per-sample GGN trace: Σ_{c,a,b} of the squared contribution per n.
+
+    With ``cfg.use_kernels`` (and ``cfg.use_fused``, the default) every
+    requested weight-block curvature statistic comes out of ONE fused
+    Pallas launch over (A, S) — the static
+    :class:`~repro.core.extensions.FusedSecondMask` selects the outputs,
+    and the ``S`` tile is read once for all of them.  Rank-1 (R==1) layers
+    skip the launch for cheaper closed forms, as in
+    :func:`dense_first_order_stats`.  With
+    ``use_fused=False`` each statistic runs its own legacy path (the
+    broadcast ``per_sample_sq_sum`` for the diagonal, a jnp einsum for the
+    B-factor/trace) — the benchmark baseline.  Bias stats are cheap
+    row-sums and stay in jnp.  The MC sweep lands here too: its sample
+    axis C̃ simply stands in for the class axis.
     """
     names = {e.name for e in exts}
     out = {}
     c, n, r, b = S.shape
-    Sf = _f32(S)
+    Af, Sf = _f32(A), _f32(S)
     diag_name = "diag_ggn_mc" if ext_prefix == "mc" else "diag_ggn"
     kron_name = "kfac" if ext_prefix == "mc" else "kflr"
+    mask = second_order_mask(names)
+    # Rank-1 (R==1) layers skip the fused launch, mirroring the first-order
+    # path: every statistic separates over the unit sequence axis (diag via
+    # the rank-1 branch of per_sample_sq_sum, kron is already the plain
+    # SᵀS einsum, trace factors into a product of row norms), which beats a
+    # kernel launch that pads R from 1 to a full sublane.
+    rank1 = A.shape[1] == 1
+    kmask = FusedSecondMask() if rank1 else mask
+    fused = None
+    if cfg.use_kernels and cfg.use_fused and kmask.any():
+        from repro.kernels import ops as kops
+
+        fused = kops.fused_second_order(Af, Sf, **kmask.wants())
     if diag_name in names:
-        Arep = jnp.broadcast_to(A[None], (c,) + A.shape).reshape(c * n, r, -1)
-        Srep = Sf.reshape(c * n, r, b)
-        d = {"w": per_sample_sq_sum(Arep, Srep, use_kernels=cfg.use_kernels)}
+        if fused is not None:
+            w = fused["diag"]
+        else:
+            Arep = jnp.broadcast_to(A[None], (c,) + A.shape).reshape(c * n, r, -1)
+            Srep = Sf.reshape(c * n, r, b)
+            w = per_sample_sq_sum(Arep, Srep, use_kernels=cfg.use_kernels)
+        d = {"w": w}
         if bias:
             ssum = jnp.sum(Sf, axis=2)
             d["b"] = jnp.sum(ssum * ssum, axis=(0, 1))
         out[diag_name] = d
     if kron_name in names:
-        b_fac = jnp.einsum("cnri,cnrj->ij", Sf, Sf) * float(r)
+        ssq = (fused["kron"] if fused is not None
+               else jnp.einsum("cnri,cnrj->ij", Sf, Sf))
+        b_fac = ssq * float(r)
         out[kron_name] = {"w": {"B": b_fac}}
         if bias:
             out[kron_name]["b"] = {"B": b_fac}
+    if "ggn_trace" in names:
+        if fused is not None:
+            tr = fused["trace"]
+        elif rank1:
+            # t² = A²[n,a]·S²[c,n,b] separates: trace_n = ‖A_n‖²·Σ_cb S².
+            tr = (jnp.sum(Af[:, 0] ** 2, -1)
+                  * jnp.sum(Sf[:, :, 0] ** 2, axis=(0, 2)))
+        else:
+            t = jnp.einsum("nra,cnrb->cnab", Af, Sf)
+            tr = jnp.sum(t * t, axis=(0, 2, 3))
+        d = {"w": tr}
+        if bias:
+            ssum = jnp.sum(Sf, axis=2)  # [C, N, b]
+            d["b"] = jnp.sum(ssum * ssum, axis=(0, 2))
+        out["ggn_trace"] = d
     return out
 
 

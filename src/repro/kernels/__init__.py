@@ -2,11 +2,13 @@ from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fused_first_order import fused_first_order_pallas
 from repro.kernels.wkv import wkv_pallas
+from repro.kernels.fused_second_order import fused_second_order_pallas
 from repro.kernels.ops import (
     batch_l2,
     cache_stats,
     dispatch,
     fused_first_order,
+    fused_second_order,
     ggn_diag,
     per_sample_moment,
     registered,

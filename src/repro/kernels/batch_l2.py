@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.compiler import mosaic_params
+
 
 def _kernel(a1_ref, b1_ref, a2_ref, b2_ref, o_ref):
     i, j = pl.program_id(1), pl.program_id(2)
@@ -51,10 +53,8 @@ def batch_l2_pallas(A, B, *, block_r=128, interpret=True):
         ],
         out_specs=pl.BlockSpec((1, 1), lambda k, i, j: (k, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
-        compiler_params=dict(
-            mosaic=dict(dimension_semantics=("parallel", "arbitrary",
-                                             "arbitrary"))
-        ) if not interpret else {},
+        compiler_params=mosaic_params("parallel", "arbitrary", "arbitrary",
+                                      interpret=interpret),
         interpret=interpret,
     )(A, B, A, B)
     return out[:, 0]

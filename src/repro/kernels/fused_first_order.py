@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.compiler import mosaic_params
+
 # Output slots in kernel-ref order (static mask selects a subset).
 OUTPUTS = ("l2", "moment", "dot")
 
@@ -121,10 +123,8 @@ def fused_first_order_pallas(A, B, *, want_l2=True, want_moment=False,
         ],
         out_specs=out_specs,
         out_shape=out_shapes,
-        compiler_params=dict(
-            mosaic=dict(dimension_semantics=("parallel", "arbitrary",
-                                             "arbitrary"))
-        ) if not interpret else {},
+        compiler_params=mosaic_params("parallel", "arbitrary", "arbitrary",
+                                      interpret=interpret),
         interpret=interpret,
     )(A, B)
     if len(names) == 1:

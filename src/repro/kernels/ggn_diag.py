@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.compiler import mosaic_params
+
 
 def _kernel(a_ref, s_ref, o_ref):
     k = pl.program_id(2)
@@ -44,9 +46,7 @@ def ggn_diag_pallas(A, S, *, block_a=128, block_b=128, interpret=True):
         ],
         out_specs=pl.BlockSpec((block_a, block_b), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((a, b), jnp.float32),
-        compiler_params=dict(
-            mosaic=dict(dimension_semantics=("parallel", "parallel",
-                                             "arbitrary"))
-        ) if not interpret else {},
+        compiler_params=mosaic_params("parallel", "parallel", "arbitrary",
+                                      interpret=interpret),
         interpret=interpret,
     )(A, S)

@@ -32,6 +32,12 @@ Registered kernels (see :func:`registered`):
                        ``want_moment`` ↔ SecondMoment/Variance, ``want_dot``
                        ↔ BatchDot.  Unrequested outputs cost nothing.
                        A leading group axis batches MoE experts.
+``fused_second_order`` ONE pass over (A, S) emitting {diag, kron, trace}
+                       under a static mask: ``want_diag`` ↔ DiagGGN(MC),
+                       ``want_kron`` ↔ KFLR/KFAC B-factor, ``want_trace`` ↔
+                       per-sample GGN trace.  The class axis is folded into
+                       the grid in ``class_chunk``-sized chunks (exact
+                       curvature at LM-vocabulary scale with bounded VMEM).
 
 Adding a kernel: write the Pallas body in its own module, then register a
 wrapper here with ``@register("name", ref=ref.name)``; the wrapper receives
@@ -51,6 +57,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.batch_l2 import batch_l2_pallas
 from repro.kernels.fused_first_order import fused_first_order_pallas
+from repro.kernels.fused_second_order import fused_second_order_pallas
 from repro.kernels.ggn_diag import ggn_diag_pallas
 from repro.kernels.per_sample_moment import per_sample_moment_pallas
 from repro.kernels.sq_matmul import sq_matmul_pallas
@@ -250,6 +257,58 @@ def _fused_first_order(A, B, *, want_l2=True, want_moment=False,
     return out
 
 
+@register("fused_second_order", ref=ref.fused_second_order)
+def _fused_second_order(A, S, *, want_diag=True, want_kron=False,
+                        want_trace=False, block_a=None, block_b=None,
+                        class_chunk=None, interpret=True):
+    """One pass over (A, S) emitting the masked second-order stats.
+
+    A: [N, R, a], S: [C, N, R, b] → dict of diag [a, b] / kron [b, b]
+    (unscaled SᵀS) / trace [N] (requested keys only).  Zero-padding N, R
+    and C is exact (padded entries contribute nothing to any sum of
+    products); padded trace entries are sliced off, diag/kron rows and
+    columns likewise.
+
+    ``class_chunk`` bounds the VMEM-resident working set per grid step
+    (``None`` = auto: the whole class axis when it fits a ~4 MiB float32
+    budget, chunked otherwise) — the grid folds the class axis so the
+    per-class contribution tensor never materializes.
+    """
+    c, n, r, b = S.shape
+    a = A.shape[-1]
+    cap = 512 if interpret else 128
+    ba = (_clamp_block(block_a, a) if block_a is not None
+          else _auto_block(a, cap))
+    bb = (_clamp_block(block_b, b) if block_b is not None
+          else _auto_block(b, cap))
+    A2 = _pad_to(_pad_to(_pad_to(A, 2, ba), 1, 8), 0, 8)
+    S2 = _pad_to(_pad_to(_pad_to(S, 3, bb), 2, 8), 1, 8)
+    if class_chunk is None:
+        # Per-class float32 working set of one grid step: the S tile,
+        # plus the [C'·N, ba, bb] MXU intermediate when diag/trace need
+        # the contraction, plus the full-width second S view for kron.
+        n2, r2 = S2.shape[1], S2.shape[2]
+        per_c = n2 * r2 * bb
+        if want_diag or want_trace:
+            per_c += n2 * ba * bb
+        if want_kron:
+            per_c += n2 * r2 * S2.shape[3]
+        class_chunk = max(1, (1 << 20) // max(per_c, 1))
+    cc = max(1, min(class_chunk, c))
+    S2 = _pad_to(S2, 0, cc)
+    out = fused_second_order_pallas(
+        A2, S2, want_diag=want_diag, want_kron=want_kron,
+        want_trace=want_trace, block_a=ba, block_b=bb, class_chunk=cc,
+        interpret=interpret)
+    if "diag" in out:
+        out["diag"] = out["diag"][:a, :b]
+    if "kron" in out:
+        out["kron"] = out["kron"][:b, :b]
+    if "trace" in out:
+        out["trace"] = out["trace"][0, :n]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # public API (thin aliases over dispatch)
 # ---------------------------------------------------------------------------
@@ -271,6 +330,16 @@ def batch_l2(A, B, block_r=128):
 
 def ggn_diag(A, S, block_a=128, block_b=128):
     return dispatch("ggn_diag", A, S, block_a=block_a, block_b=block_b)
+
+
+def fused_second_order(A, S, want_diag=True, want_kron=False,
+                       want_trace=False, block_a=None, block_b=None,
+                       class_chunk=None):
+    """Fused second-order stats: A [N, R, a], S [C, N, R, b]."""
+    return dispatch("fused_second_order", A, S, want_diag=want_diag,
+                    want_kron=want_kron, want_trace=want_trace,
+                    block_a=block_a, block_b=block_b,
+                    class_chunk=class_chunk)
 
 
 def fused_first_order(A, B, want_l2=True, want_moment=False, want_dot=False,

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.compiler import mosaic_params
+
 
 def _kernel(a_ref, b_ref, o_ref):
     n = pl.program_id(2)
@@ -48,9 +50,7 @@ def per_sample_moment_pallas(A, B, *, block_a=128, block_b=128,
         ],
         out_specs=pl.BlockSpec((block_a, block_b), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((a, b), jnp.float32),
-        compiler_params=dict(
-            mosaic=dict(dimension_semantics=("parallel", "parallel",
-                                             "arbitrary"))
-        ) if not interpret else {},
+        compiler_params=mosaic_params("parallel", "parallel", "arbitrary",
+                                      interpret=interpret),
         interpret=interpret,
     )(A, B)

@@ -40,6 +40,27 @@ def batch_dot(A, B):
     return jnp.sum(ga * gb, axis=(2, 3))
 
 
+def fused_second_order(A, S, want_diag=True, want_kron=False,
+                       want_trace=False):
+    """Oracle for the fused curvature kernel: t[c,n] = A_nᵀ S_cn, reduce.
+
+    A: [N, R, a], S: [C, N, R, b] → dict of requested float32 stats
+    (diag [a, b] · kron [b, b] (unscaled SᵀS) · trace [N]).
+    """
+    Af, Sf = A.astype(jnp.float32), S.astype(jnp.float32)
+    out = {}
+    if want_diag or want_trace:
+        t = jnp.einsum("nra,cnrb->cnab", Af, Sf)
+        t2 = t * t
+        if want_diag:
+            out["diag"] = jnp.sum(t2, axis=(0, 1))
+        if want_trace:
+            out["trace"] = jnp.sum(t2, axis=(0, 2, 3))
+    if want_kron:
+        out["kron"] = jnp.einsum("cnri,cnrj->ij", Sf, Sf)
+    return out
+
+
 def fused_first_order(A, B, want_l2=True, want_moment=False, want_dot=False):
     """Oracle for the fused kernel: materialize G[n] = A_nᵀB_n, reduce.
 

@@ -1,0 +1,99 @@
+"""Differential harness: every extension combo × every kernel config.
+
+The paper's core claim — the same quantities come out of one shared
+backward pass no matter how the reductions are scheduled — as an
+executable invariant: for extension subsets drawn from ``ALL_EXTENSIONS``
+(singletons plus the interesting first-/second-order combos), running the
+engine under every ``use_kernels × use_fused`` configuration must produce
+pairwise-allclose results.  ``use_kernels=False / use_fused=True`` is the
+reference; the two kernel configurations (fused kernels on; legacy
+one-kernel-per-extension) are compared leaf by leaf against it, which by
+transitivity makes all pairs close.  The fourth corner of the cross
+product, ``(False, False)``, is path-identical to the reference today
+(``use_fused`` is only consulted when kernels are on) — it stays in the
+sweep as a cheap guard that that property holds.
+
+One fixed small chain model (Dense → sigmoid → Dense) keeps every sweep —
+including the chain-only KFRA / DiagHessian — in play, and one fixed rng
+makes the MC factorization identical across configurations so the
+comparison is exact up to accumulation order.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALL_EXTENSIONS,
+    Activation,
+    CrossEntropyLoss,
+    Dense,
+    ExtensionConfig,
+    Sequential,
+    by_name,
+    run,
+)
+
+N, D, H, C = 5, 6, 7, 4
+LOSS = CrossEntropyLoss()
+CONFIGS = [
+    ExtensionConfig(use_kernels=uk, use_fused=uf)
+    for uk, uf in itertools.product([False, True], repeat=2)
+]
+REFERENCE = ExtensionConfig(use_kernels=False, use_fused=True)
+
+# Every singleton, plus the combos that share sweeps (and therefore fused
+# kernel launches): all-first-order, exact-curvature, MC-curvature, and a
+# mixed first+second workload.
+SUBSETS = [(e.name,) for e in ALL_EXTENSIONS] + [
+    ("batch_grad", "batch_l2", "second_moment", "variance", "batch_dot"),
+    ("diag_ggn", "kflr", "ggn_trace"),
+    ("diag_ggn_mc", "kfac"),
+    ("batch_grad", "batch_l2", "diag_ggn", "kflr"),
+    ("variance", "batch_dot", "diag_ggn", "ggn_trace", "diag_ggn_mc",
+     "kfac", "kfra", "diag_hessian"),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = Sequential([Dense(D, H), Activation("sigmoid"), Dense(H, C)])
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    y = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, C)
+    return model, params, x, y
+
+
+def _leaves(tree):
+    return [l for l in jax.tree.leaves(tree) if hasattr(l, "ndim")]
+
+
+@pytest.mark.parametrize("names", SUBSETS, ids=["+".join(s) for s in SUBSETS])
+def test_all_configs_agree(names, setup):
+    model, params, x, y = setup
+    exts = tuple(by_name(n) for n in names)
+    rng = jax.random.PRNGKey(42)  # same MC draws in every configuration
+    results = [run(model, params, x, y, LOSS, extensions=exts, cfg=cfg,
+                   rng=rng) for cfg in CONFIGS]
+    ref = results[CONFIGS.index(REFERENCE)]
+
+    # the plain training quantities must agree too, not just the extensions
+    for res in results:
+        np.testing.assert_allclose(np.asarray(res.loss),
+                                   np.asarray(ref.loss), rtol=1e-6)
+        for a, b in zip(_leaves(res.grads), _leaves(ref.grads)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    for res, cfg in zip(results, CONFIGS):
+        assert set(res.ext) == set(ref.ext), cfg
+        for name in ref.ext:
+            ra, rb = _leaves(ref.ext[name]), _leaves(res.ext[name])
+            assert len(ra) == len(rb) and ra, (name, cfg)
+            for a, b in zip(ra, rb):
+                assert a.shape == b.shape, (name, cfg)
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5,
+                    err_msg=f"{name} under {cfg}")

@@ -1,0 +1,253 @@
+"""Fused second-order kernel: parity, masks, chunking, registry, routing."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CrossEntropyLoss,
+    DiagGGN,
+    DiagGGNMC,
+    ExtensionConfig,
+    GGNTrace,
+    KFAC,
+    KFLR,
+    plan_sweeps,
+    run,
+    second_order_mask,
+)
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+TOL = {jnp.float32: dict(rtol=3e-5, atol=3e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+LOSS = CrossEntropyLoss()
+ALL_KEYS = ("diag", "kron", "trace")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _pair(c, n, r, a, b, dtype=jnp.float32, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return (_rand(k, (n, r, a), dtype),
+            _rand(jax.random.fold_in(k, 1), (c, n, r, b), dtype))
+
+
+def _all(A, S, **kw):
+    return ops.fused_second_order(A, S, want_diag=True, want_kron=True,
+                                  want_trace=True, **kw)
+
+
+# --- kernel vs oracle parity -------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("c,n,r,a,b", [
+    (3, 4, 5, 17, 9),       # nothing block-aligned
+    (1, 5, 1, 33, 65),      # C=1, R=1
+    (4, 1, 7, 130, 24),     # N=1, a just over a sublane multiple
+    (10, 2, 3, 8, 300),     # class axis ≫ batch, wide output
+])
+def test_fused_second_parity_all_outputs(c, n, r, a, b, dtype):
+    A, S = _pair(c, n, r, a, b, dtype, seed=c * n + a)
+    got = _all(A, S)
+    want = ref.fused_second_order(A, S, want_diag=True, want_kron=True,
+                                  want_trace=True)
+    for key in ALL_KEYS:
+        np.testing.assert_allclose(np.asarray(got[key]),
+                                   np.asarray(want[key]), **TOL[dtype],
+                                   err_msg=key)
+
+
+@pytest.mark.parametrize("block_a,block_b", [(8, 8), (16, 32), (32, 16)])
+def test_fused_second_parity_multi_tile(block_a, block_b):
+    """Force feature tiling so the cross-tile accumulators are exercised:
+    diag accumulates per (i, j) tile over class chunks, kron only on the
+    i == 0 lane, trace across every grid step."""
+    A, S = _pair(5, 3, 4, 50, 41, seed=7)
+    got = _all(A, S, block_a=block_a, block_b=block_b)
+    want = ref.fused_second_order(A, S, want_diag=True, want_kron=True,
+                                  want_trace=True)
+    for key in ALL_KEYS:
+        np.testing.assert_allclose(np.asarray(got[key]),
+                                   np.asarray(want[key]),
+                                   rtol=3e-5, atol=3e-5, err_msg=key)
+
+
+def test_fused_second_all_mask_combinations():
+    """Every 2^3 mask: requested keys present and correct, others absent."""
+    A, S = _pair(3, 4, 3, 19, 11)
+    for wd, wk, wt in itertools.product([False, True], repeat=3):
+        if not (wd or wk or wt):
+            with pytest.raises(ValueError):
+                ops.fused_second_order(A, S, want_diag=False,
+                                       want_kron=False, want_trace=False)
+            continue
+        got = ops.fused_second_order(A, S, want_diag=wd, want_kron=wk,
+                                     want_trace=wt)
+        want = ref.fused_second_order(A, S, want_diag=wd, want_kron=wk,
+                                      want_trace=wt)
+        assert set(got) == set(want)
+        for key in got:
+            np.testing.assert_allclose(np.asarray(got[key]),
+                                       np.asarray(want[key]),
+                                       rtol=3e-5, atol=3e-5, err_msg=key)
+
+
+def test_fused_second_class_chunk_schedules():
+    """Chunk schedule invariance: any chunking of the class-grid axis gives
+    the same result (allclose across schedules), and each schedule is
+    deterministic (bitwise-identical on rerun)."""
+    A, S = _pair(6, 3, 4, 21, 13, seed=3)
+    want = ref.fused_second_order(A, S, want_diag=True, want_kron=True,
+                                  want_trace=True)
+    for chunk in (1, 2, 3, 6, None):
+        got = _all(A, S, class_chunk=chunk)
+        again = _all(A, S, class_chunk=chunk)
+        for key in ALL_KEYS:
+            np.testing.assert_allclose(np.asarray(got[key]),
+                                       np.asarray(want[key]),
+                                       rtol=3e-5, atol=3e-5,
+                                       err_msg=f"{key} chunk={chunk}")
+            assert np.array_equal(np.asarray(got[key]),
+                                  np.asarray(again[key])), (key, chunk)
+
+
+def test_fused_second_internal_consistency():
+    """Σ_n trace[n] == Σ_ab diag[a, b], and kron == Σ SᵀS exactly."""
+    A, S = _pair(4, 5, 3, 23, 13, seed=11)
+    got = _all(A, S)
+    np.testing.assert_allclose(float(jnp.sum(got["trace"])),
+                               float(jnp.sum(got["diag"])), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(got["kron"]),
+        np.asarray(jnp.einsum("cnri,cnrj->ij", S, S)),
+        rtol=3e-5, atol=3e-5)
+    # PSD-ness of the factor and nonnegativity of the squares
+    evals = np.linalg.eigvalsh(np.asarray(got["kron"], np.float64))
+    assert evals.min() >= -1e-5
+    assert (np.asarray(got["diag"]) >= -1e-6).all()
+    assert (np.asarray(got["trace"]) >= -1e-6).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(1, 6), n=st.integers(1, 6), r=st.integers(1, 5),
+       a=st.integers(1, 33), b=st.integers(1, 33),
+       seed=st.integers(0, 2 ** 16))
+def test_fused_second_hypothesis_parity(c, n, r, a, b, seed):
+    A, S = _pair(c, n, r, a, b, seed=seed)
+    got = _all(A, S)
+    want = ref.fused_second_order(A, S, want_diag=True, want_kron=True,
+                                  want_trace=True)
+    for key in ALL_KEYS:
+        np.testing.assert_allclose(np.asarray(got[key]),
+                                   np.asarray(want[key]),
+                                   rtol=5e-5, atol=5e-5, err_msg=key)
+
+
+# --- registry ----------------------------------------------------------------
+
+def test_fused_second_registered_with_oracle():
+    assert "fused_second_order" in ops.registered()
+    spec = ops.get_spec("fused_second_order")
+    assert spec.ref is ref.fused_second_order and spec.description
+    A, S = _pair(2, 3, 2, 10, 7)
+    ops.clear_cache()
+    ops.fused_second_order(A, S, want_diag=True)
+    n0 = ops.cache_stats()["total"]
+    ops.fused_second_order(A, S, want_diag=True)           # cached config
+    assert ops.cache_stats()["total"] == n0
+    ops.fused_second_order(A, S, want_diag=True, want_kron=True)
+    assert ops.cache_stats()["fused_second_order"] >= 2    # new static opts
+
+
+# --- sweep plan + engine routing ---------------------------------------------
+
+def test_sweep_plan_second_order_lane():
+    plan = plan_sweeps((DiagGGN, KFLR))
+    assert plan.fused_second_mask.diag and plan.fused_second_mask.kron
+    assert not plan.fused_second_mask.trace
+    assert "fused_second_order=['diag', 'kron']" in plan.describe()
+    assert not plan.fused_active  # default config: jnp path
+    active = plan_sweeps((DiagGGN, KFLR, GGNTrace),
+                         ExtensionConfig(use_kernels=True))
+    assert active.fused_active
+    assert "fused_second_order=['diag', 'kron', 'trace']" in active.describe()
+    # MC extensions land on the same kernel outputs
+    mask = second_order_mask((DiagGGNMC, KFAC))
+    assert mask.diag and mask.kron and not mask.trace
+    assert mask.wants() == dict(want_diag=True, want_kron=True,
+                                want_trace=False)
+    assert not plan_sweeps((DiagGGN,)).fused_second_mask.kron
+    assert plan_sweeps(()).fused_second_mask.any() is False
+
+
+def _fixture(seed=0, n=5, d=6, h=7, c=4):
+    from repro.configs.papernets import mlp
+
+    model = mlp(n_classes=c, in_dim=d, hidden=(h,))
+    params = model.init(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, d))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 2), (n,), 0, c)
+    return model, params, x, y
+
+
+def test_engine_fused_second_matches_jnp():
+    """use_kernels=True (fused curvature) ≡ pure-jnp path on exact + MC."""
+    model, params, x, y = _fixture()
+    exts = (DiagGGN, KFLR, GGNTrace, DiagGGNMC, KFAC)
+    rng = jax.random.PRNGKey(9)
+    res_jnp = run(model, params, x, y, LOSS, extensions=exts,
+                  cfg=ExtensionConfig(use_kernels=False), rng=rng)
+    res_fus = run(model, params, x, y, LOSS, extensions=exts,
+                  cfg=ExtensionConfig(use_kernels=True), rng=rng)
+    for ext in ("diag_ggn", "kflr", "ggn_trace", "diag_ggn_mc", "kfac"):
+        ja, fu = (jax.tree.leaves(res_jnp.ext[ext]),
+                  jax.tree.leaves(res_fus.ext[ext]))
+        assert len(ja) == len(fu) and ja
+        for a, b in zip(ja, fu):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=2e-5, err_msg=ext)
+
+
+def test_engine_fused_second_matches_jnp_conv():
+    """R > 1 (conv patch positions): the fused kernel itself — not the
+    rank-1 closed forms — is on the engine path, and matches jnp."""
+    from repro.configs.papernets import c2d2
+
+    model = c2d2(n_classes=4, in_ch=1, img=8)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 8, 8, 1))
+    y = jax.random.randint(jax.random.PRNGKey(2), (3,), 0, 4)
+    exts = (DiagGGN, KFLR, GGNTrace)
+    res_jnp = run(model, params, x, y, LOSS, extensions=exts,
+                  cfg=ExtensionConfig(use_kernels=False))
+    res_fus = run(model, params, x, y, LOSS, extensions=exts,
+                  cfg=ExtensionConfig(use_kernels=True))
+    for ext in ("diag_ggn", "kflr", "ggn_trace"):
+        ja, fu = (jax.tree.leaves(res_jnp.ext[ext]),
+                  jax.tree.leaves(res_fus.ext[ext]))
+        assert len(ja) == len(fu) and ja
+        for a, b in zip(ja, fu):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-5, atol=3e-5, err_msg=ext)
+
+
+def test_engine_ggn_trace_sums_to_diag_trace():
+    """Σ_n ggn_trace[n] per layer == Σ diag_ggn of that layer's params —
+    the per-sample trace is an exact decomposition of the GGN trace."""
+    model, params, x, y = _fixture(seed=4)
+    res = run(model, params, x, y, LOSS, extensions=(DiagGGN, GGNTrace),
+              cfg=ExtensionConfig(use_kernels=True))
+    tr_total = sum(float(jnp.sum(l))
+                   for l in jax.tree.leaves(res["ggn_trace"]))
+    diag_total = sum(float(jnp.sum(l))
+                     for l in jax.tree.leaves(res["diag_ggn"]))
+    np.testing.assert_allclose(tr_total, diag_total, rtol=1e-5)
+    for l in jax.tree.leaves(res["ggn_trace"]):
+        assert l.shape == (x.shape[0],)
+        assert float(jnp.min(l)) >= -1e-6

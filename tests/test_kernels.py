@@ -94,6 +94,47 @@ def test_batch_l2_hypothesis_nonneg_and_match(n, r, a, b, seed):
                                rtol=5e-5, atol=5e-5)
 
 
+# --- ggn_diag edge shapes + chunk schedules ----------------------------------
+
+@pytest.mark.parametrize("c,n,r,a,b", [
+    (1, 1, 1, 1, 1),        # everything degenerate
+    (1, 4, 3, 17, 5),       # C=1, odd features
+    (3, 1, 7, 9, 129),      # N=1, b one over a tile boundary
+    (5, 2, 11, 131, 33),    # nothing tile- or sublane-aligned
+    (2, 3, 1, 257, 1),      # R=1, scalar output dim
+])
+def test_ggn_diag_edge_shapes(c, n, r, a, b):
+    k = jax.random.PRNGKey(c * 31 + a)
+    A = jax.random.normal(k, (n, r, a))
+    S = jax.random.normal(jax.random.fold_in(k, 1), (c, n, r, b))
+    np.testing.assert_allclose(
+        np.asarray(ops.ggn_diag(A, S)), np.asarray(ref.ggn_diag(A, S)),
+        rtol=3e-5, atol=3e-5)
+
+
+def test_ggn_diag_class_chunk_invariance():
+    """Engine-style class chunking (run the kernel on C-slices, sum) agrees
+    with the one-shot kernel for chunk ∈ {1, 3, C}, and every chunk
+    schedule is deterministic: the float32 accumulation order is fixed per
+    schedule, so a rerun is bitwise identical."""
+    c, n, r, a, b = 6, 3, 4, 21, 13
+    k = jax.random.PRNGKey(0)
+    A = jax.random.normal(k, (n, r, a))
+    S = jax.random.normal(jax.random.fold_in(k, 1), (c, n, r, b))
+    full = np.asarray(ops.ggn_diag(A, S))
+    for chunk in (1, 3, c):
+        def sched():
+            acc = jnp.zeros((a, b), jnp.float32)
+            for i in range(0, c, chunk):
+                acc = acc + ops.ggn_diag(A, S[i:i + chunk])
+            return np.asarray(acc)
+
+        got = sched()
+        np.testing.assert_allclose(got, full, rtol=3e-5, atol=3e-5,
+                                   err_msg=f"chunk={chunk}")
+        assert np.array_equal(got, sched()), f"chunk={chunk} not bitwise-stable"
+
+
 # --- flash attention kernel ---------------------------------------------------
 
 @pytest.mark.parametrize("window", [None, 13])
