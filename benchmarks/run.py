@@ -14,6 +14,9 @@ smaller shapes where a benchmark defines them (currently ``fused``).
                                                           ISSUE 2 tentpole)
   kernels   Pallas kernels (interpret)                   (deliverable c)
   fused     fused first-order kernel vs per-extension    (ISSUE 1 tentpole)
+  laplace   posterior fit + fused predictive-variance
+            kernel vs naive Jacobian baseline; also
+            refreshes repo-root BENCH_laplace.json       (ISSUE 3 tentpole)
   roofline  dry-run roofline table                       (deliverable g)
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick] [--json OUT]
@@ -52,6 +55,7 @@ def main() -> None:
         bench_hessian_diag,
         bench_individual,
         bench_kernels,
+        bench_laplace,
         bench_optimizers,
         bench_overhead,
         bench_roofline,
@@ -65,6 +69,7 @@ def main() -> None:
         "fig9": bench_hessian_diag.main,
         "kernels": bench_kernels.main,
         "fused": bench_fused_first_order.main,
+        "laplace": bench_laplace.main,
         "roofline": bench_roofline.main,
     }
 

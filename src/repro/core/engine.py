@@ -84,10 +84,30 @@ class SweepPlan:
         # config routes both lanes through the fused kernels.
         second = [k for k in ("diag", "kron", "trace")
                   if getattr(self.fused_second_mask, k)]
+        structures = list(self.posterior_structures())
         return (f"sweeps={sorted(self.sweeps) or ['first']} "
                 f"passes={passes} fused_first_order={lane} "
                 f"fused_second_order={second or None} "
-                f"fused_active={self.fused_active}")
+                f"fused_active={self.fused_active} "
+                f"laplace={structures or None}")
+
+    def posterior_structures(self) -> tuple:
+        """Laplace posterior structures this sweep plan can fit.
+
+        ``'diag'`` needs a GGN diagonal (DiagGGN / DiagGGNMC), ``'kron'``
+        Kronecker factors (KFLR / KFAC); ``'last_layer'`` restricts either
+        to the final Dense layer, so it is available whenever any structure
+        is.  ``repro.laplace`` validates fits against this — a misconfigured
+        fit fails with this list in the message instead of a shape error.
+        """
+        out = []
+        if self.names & {"diag_ggn", "diag_ggn_mc"}:
+            out.append("diag")
+        if self.names & {"kflr", "kfac"}:
+            out.append("kron")
+        if out:
+            out.append("last_layer")
+        return tuple(out)
 
 
 def plan_sweeps(extensions: Sequence[Extension],
@@ -236,7 +256,11 @@ def run(
     if "ggn_mc" in sweeps:
         mc_exts = tuple(e for e in extensions if e.sweep == "ggn_mc")
         if rng is None:
-            raise ValueError("MC extensions need an rng key")
+            if cfg.mc_seed is None:
+                raise ValueError(
+                    "MC extensions need an rng key: pass rng= or set "
+                    "ExtensionConfig(mc_seed=...) for deterministic sweeps")
+            rng = jax.random.PRNGKey(cfg.mc_seed)
         S = loss.sqrt_hessian_mc(rng, z, targets, cfg.mc_samples)
         _, curv = model.curv_backward(params, tape, S, mc_exts, cfg, "mc")
         if "diag_ggn_mc" in names:

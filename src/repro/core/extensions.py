@@ -149,6 +149,13 @@ class ExtensionConfig:
     """Knobs shared by the engine's sweeps."""
 
     mc_samples: int = 1          # C̃ for the MC factorization (paper Eq. 20)
+    # Explicit PRNG seed for the MC sweep (DiagGGNMC / KFAC).  When the
+    # caller passes no ``rng`` to ``engine.run``, the sweep derives its key
+    # from this seed — repeated runs with the same config are then
+    # deterministic (required by the marglik tests; previously every MC
+    # caller had to thread its own key or the run failed).  An explicit
+    # ``rng`` argument still takes precedence.
+    mc_seed: Optional[int] = None
     class_chunk: Optional[int] = None  # chunk size over C for exact factors
     # When True, first-order moment formulas route through the Pallas kernels
     # in repro.kernels (interpret=True on CPU); pure-jnp einsums otherwise.

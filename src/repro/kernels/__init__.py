@@ -3,6 +3,7 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fused_first_order import fused_first_order_pallas
 from repro.kernels.wkv import wkv_pallas
 from repro.kernels.fused_second_order import fused_second_order_pallas
+from repro.kernels.predictive_var import predictive_var_pallas
 from repro.kernels.ops import (
     batch_l2,
     cache_stats,
@@ -11,6 +12,7 @@ from repro.kernels.ops import (
     fused_second_order,
     ggn_diag,
     per_sample_moment,
+    predictive_var,
     registered,
     sq_matmul,
 )

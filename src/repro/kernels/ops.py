@@ -38,6 +38,11 @@ Registered kernels (see :func:`registered`):
                        per-sample GGN trace.  The class axis is folded into
                        the grid in ``class_chunk``-sized chunks (exact
                        curvature at LM-vocabulary scale with bounded VMEM).
+``predictive_var``     GLM predictive variance diag(J Σ Jᵀ) [C, N] from the
+                       Jacobian-factor pair (A, S) in one pass — diag Σ via
+                       an elementwise ``Sigma [a, b]`` weight, Kronecker Σ
+                       via caller-side half-transforms (see the kernel
+                       module doc).  The Laplace serving hot path.
 
 Adding a kernel: write the Pallas body in its own module, then register a
 wrapper here with ``@register("name", ref=ref.name)``; the wrapper receives
@@ -60,6 +65,7 @@ from repro.kernels.fused_first_order import fused_first_order_pallas
 from repro.kernels.fused_second_order import fused_second_order_pallas
 from repro.kernels.ggn_diag import ggn_diag_pallas
 from repro.kernels.per_sample_moment import per_sample_moment_pallas
+from repro.kernels.predictive_var import predictive_var_pallas
 from repro.kernels.sq_matmul import sq_matmul_pallas
 
 
@@ -166,6 +172,24 @@ def _auto_block(dim, cap):
         return 8
     n_tiles = -(-dim // cap)
     return min(cap, -(-(-(-dim // n_tiles)) // 8) * 8)
+
+
+def _pad_factor_pair(A, S, block_a, block_b, interpret):
+    """Shared block-sizing + padding policy for the ``(A, S)`` kernels
+    (``fused_second_order``, ``predictive_var``): A [N, R, a] and
+    S [C, N, R, b] padded to (auto- or caller-chosen) feature blocks and
+    sublane multiples.  Returns ``(A2, S2, ba, bb)``; the per-kernel auto
+    ``class_chunk`` budgets stay with their wrappers (their VMEM working
+    sets genuinely differ)."""
+    a, b = A.shape[-1], S.shape[-1]
+    cap = 512 if interpret else 128
+    ba = (_clamp_block(block_a, a) if block_a is not None
+          else _auto_block(a, cap))
+    bb = (_clamp_block(block_b, b) if block_b is not None
+          else _auto_block(b, cap))
+    A2 = _pad_to(_pad_to(_pad_to(A, 2, ba), 1, 8), 0, 8)
+    S2 = _pad_to(_pad_to(_pad_to(S, 3, bb), 2, 8), 1, 8)
+    return A2, S2, ba, bb
 
 
 # ---------------------------------------------------------------------------
@@ -276,13 +300,7 @@ def _fused_second_order(A, S, *, want_diag=True, want_kron=False,
     """
     c, n, r, b = S.shape
     a = A.shape[-1]
-    cap = 512 if interpret else 128
-    ba = (_clamp_block(block_a, a) if block_a is not None
-          else _auto_block(a, cap))
-    bb = (_clamp_block(block_b, b) if block_b is not None
-          else _auto_block(b, cap))
-    A2 = _pad_to(_pad_to(_pad_to(A, 2, ba), 1, 8), 0, 8)
-    S2 = _pad_to(_pad_to(_pad_to(S, 3, bb), 2, 8), 1, 8)
+    A2, S2, ba, bb = _pad_factor_pair(A, S, block_a, block_b, interpret)
     if class_chunk is None:
         # Per-class float32 working set of one grid step: the S tile,
         # plus the [C'·N, ba, bb] MXU intermediate when diag/trace need
@@ -307,6 +325,41 @@ def _fused_second_order(A, S, *, want_diag=True, want_kron=False,
     if "trace" in out:
         out["trace"] = out["trace"][0, :n]
     return out
+
+
+@register("predictive_var", ref=ref.predictive_var)
+def _predictive_var(A, S, *maybe_sigma, want_sigma=False, block_a=None,
+                    block_b=None, class_chunk=None, interpret=True):
+    """GLM predictive variance from Jacobian-factor tiles, in one pass.
+
+    A: [N, R, a], S: [C, N, R, b] (+ Sigma [a, b] when ``want_sigma``) →
+    var [C, N] float32.  Zero-padding N, R, C and the feature axes is
+    exact: padded A/S entries zero the contraction tile, so the squared
+    (optionally Sigma-weighted) contributions vanish; padded var rows and
+    columns are sliced off.
+
+    ``class_chunk`` bounds the VMEM-resident working set per grid step
+    (``None`` = auto, same ~4 MiB float32 budget as ``fused_second_order``).
+    """
+    c, n, r, b = S.shape
+    a = A.shape[-1]
+    A2, S2, ba, bb = _pad_factor_pair(A, S, block_a, block_b, interpret)
+    Sigma2 = None
+    if want_sigma:
+        (Sigma,) = maybe_sigma
+        Sigma2 = _pad_to(_pad_to(Sigma, 1, bb), 0, ba)
+    if class_chunk is None:
+        # Per-class float32 working set of one grid step: the S tile plus
+        # the [C'·N, ba, bb] MXU contraction intermediate.
+        n2, r2 = S2.shape[1], S2.shape[2]
+        per_c = n2 * r2 * bb + n2 * ba * bb
+        class_chunk = max(1, (1 << 20) // max(per_c, 1))
+    cc = max(1, min(class_chunk, c))
+    S2 = _pad_to(S2, 0, cc)
+    out = predictive_var_pallas(
+        A2, S2, Sigma2, block_a=ba, block_b=bb, class_chunk=cc,
+        interpret=interpret)
+    return out[:c, :n]
 
 
 # ---------------------------------------------------------------------------
@@ -338,6 +391,23 @@ def fused_second_order(A, S, want_diag=True, want_kron=False,
     """Fused second-order stats: A [N, R, a], S [C, N, R, b]."""
     return dispatch("fused_second_order", A, S, want_diag=want_diag,
                     want_kron=want_kron, want_trace=want_trace,
+                    block_a=block_a, block_b=block_b,
+                    class_chunk=class_chunk)
+
+
+def predictive_var(A, S, Sigma=None, block_a=None, block_b=None,
+                   class_chunk=None):
+    """GLM predictive variance [C, N]: A [N, R, a], S [C, N, R, b].
+
+    ``Sigma [a, b]`` weights the squared Jacobian elementwise (diagonal
+    posterior); without it the output is ``‖J[c,n]‖²_F`` (the Kronecker
+    path on half-transformed inputs — see kernels/predictive_var.py).
+    """
+    if Sigma is None:
+        return dispatch("predictive_var", A, S, want_sigma=False,
+                        block_a=block_a, block_b=block_b,
+                        class_chunk=class_chunk)
+    return dispatch("predictive_var", A, S, Sigma, want_sigma=True,
                     block_a=block_a, block_b=block_b,
                     class_chunk=class_chunk)
 

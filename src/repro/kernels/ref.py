@@ -61,6 +61,20 @@ def fused_second_order(A, S, want_diag=True, want_kron=False,
     return out
 
 
+def predictive_var(A, S, Sigma=None):
+    """var[c,n] = Σ_{ab} (Σ_r A[n,r,a] S[c,n,r,b])² [· Sigma[a,b]].
+
+    The naive per-sample-Jacobian baseline for the GLM predictive
+    variance: materialize J[c,n] = A_nᵀS_cn, square, (weight,) reduce.
+    """
+    Af, Sf = A.astype(jnp.float32), S.astype(jnp.float32)
+    t = jnp.einsum("nra,cnrb->cnab", Af, Sf)
+    t2 = t * t
+    if Sigma is not None:
+        t2 = t2 * Sigma.astype(jnp.float32)
+    return jnp.sum(t2, axis=(2, 3))
+
+
 def fused_first_order(A, B, want_l2=True, want_moment=False, want_dot=False):
     """Oracle for the fused kernel: materialize G[n] = A_nᵀB_n, reduce.
 

@@ -1,0 +1,34 @@
+"""repro.laplace — curvature-backed uncertainty from one engine sweep.
+
+The second consumer of BackPACK's by-products (after the §4 preconditioned
+optimizer): the quantities the fused curvature kernels already emit —
+DiagGGN / DiagGGNMC diagonals, KFLR / KFAC Kronecker factors — are exactly
+the posterior precisions of a Laplace approximation around the trained
+weights.  One ``core.engine`` run therefore buys
+
+* a fitted Gaussian posterior (:mod:`repro.laplace.posterior` —
+  :class:`DiagLaplace`, :class:`KronLaplace`, :class:`LastLayerLaplace`),
+* the marginal likelihood ``log p(D | prior_prec)`` with closed-form
+  log-determinants, and a jit-compiled optimizer for prior precision and
+  observation noise (:mod:`repro.laplace.marglik`),
+* calibrated predictions with uncertainty: the linearized GLM predictive
+  (fused ``predictive_var`` Pallas kernel on the hot path) and the
+  MC-sampled predictive (:mod:`repro.laplace.predictive`).
+
+Public API::
+
+    from repro.laplace import (
+        DiagLaplace, KronLaplace, LastLayerLaplace, LaplaceStructureError,
+        fit_posterior, glm_predictive, mc_predictive, probit_predictive,
+        log_marglik, optimize_marglik,
+    )
+"""
+from .posterior import (
+    DiagLaplace,
+    KronLaplace,
+    LaplaceStructureError,
+    LastLayerLaplace,
+    fit_posterior,
+)
+from .marglik import log_marglik, optimize_marglik
+from .predictive import glm_predictive, mc_predictive, probit_predictive

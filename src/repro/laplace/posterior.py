@@ -1,0 +1,524 @@
+"""Laplace posteriors fitted from a ``core.engine`` run.
+
+A Laplace approximation around the MAP estimate ``θ*`` is the Gaussian
+``N(θ*, P⁻¹)`` with posterior precision
+
+    P = H_lik + δ I,       H_lik ≈ M · G(θ*) / σ²
+
+where ``G`` is the engine's GGN approximation of the **mean**-loss
+curvature (the 1/M of the objective is folded into the propagated factors,
+see ``core.loss_hessian``), ``M`` the number of sample units, ``δ`` the
+prior precision and ``σ`` the observation noise (regression only).
+
+Two structures, matching the engine's curvature families:
+
+* :class:`DiagLaplace` — elementwise precisions from DiagGGN / DiagGGNMC;
+* :class:`KronLaplace` — per-layer Kronecker blocks ``A ⊗ B`` from
+  KFLR / KFAC, damped with the Martens–Grosse π split (``repro.core.kron``):
+  ``P_block = (A + π√δ I) ⊗ (M·B/σ² + √δ/π I)``.  Log-determinants and
+  samples stay closed-form (``logdet(A'⊗B') = b·logdet A' + a·logdet B'``,
+  ``θ = θ* + A'^{-1/2} E B'^{-1/2}``), which is what makes marginal-
+  likelihood tuning cheap.
+
+:class:`LastLayerLaplace` restricts either structure to the final Dense
+layer of a Sequential model (the classic last-layer Laplace), which is the
+practical scope for LM-sized configs: the feature extractor stays a point
+estimate and the engine sweep runs on the head alone.
+
+Fits are validated against ``SweepPlan.posterior_structures()`` — asking a
+plan for a structure its extensions cannot serve raises
+:class:`LaplaceStructureError` with the plan description instead of a
+downstream shape error.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    CrossEntropyLoss,
+    DiagGGN,
+    DiagGGNMC,
+    ExtensionConfig,
+    KFAC,
+    KFLR,
+    MSELoss,
+    kron as K,
+)
+from repro.core import engine as eng
+from repro.core.module import Dense, Sequential
+
+
+class LaplaceStructureError(ValueError):
+    """A Laplace fit/predictive was asked for a structure the sweep plan or
+    model cannot serve; the message says what to change."""
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _n_units(loss, y) -> float:
+    """Number of sample units M (the 1/M folded into engine factors)."""
+    if isinstance(loss, CrossEntropyLoss):
+        return float(max(int(jnp.sum(y >= 0)), 1))
+    if isinstance(loss, MSELoss):
+        return float(max(int(y.size // y.shape[-1]), 1))
+    raise LaplaceStructureError(
+        f"laplace: unsupported loss {type(loss).__name__} "
+        "(CrossEntropyLoss or MSELoss)")
+
+
+def _likelihood_of(loss) -> str:
+    return "regression" if isinstance(loss, MSELoss) else "classification"
+
+
+def _is_kron_block(node) -> bool:
+    return (isinstance(node, dict) and "B" in node
+            and set(node) <= {"A", "B", "A_diag"})
+
+
+def _map_kron(fn, mean, kron, path="params"):
+    """Map ``fn(mean_leaf, block)`` over param leaves zipped with their
+    Kronecker blocks, preserving the mean tree's structure.  A param leaf
+    without a block is a structure error (the actionable alternative to a
+    shape mismatch deep inside a solve)."""
+    if isinstance(mean, dict):
+        k_d = kron if isinstance(kron, dict) else {}
+        return {k: _map_kron(fn, v, k_d.get(k), f"{path}.{k}")
+                for k, v in mean.items()}
+    if isinstance(mean, (tuple, list)):
+        k_t = (kron if isinstance(kron, (tuple, list))
+               and len(kron) == len(mean) else (None,) * len(mean))
+        return tuple(_map_kron(fn, m, c, f"{path}[{i}]")
+                     for i, (m, c) in enumerate(zip(mean, k_t)))
+    if mean is None or not hasattr(mean, "ndim"):
+        return mean
+    if not _is_kron_block(kron):
+        raise LaplaceStructureError(
+            f"KronLaplace: no Kronecker factors for {path} — the engine "
+            "emits KFLR/KFAC blocks for Dense/Conv2d/Embedding layers only; "
+            "for other models fit with last_layer=True or DiagLaplace")
+    return fn(mean, kron)
+
+
+def _require_structure(structure: str, extensions, cfg) -> None:
+    plan = eng.plan_sweeps(extensions, cfg)
+    if structure not in plan.posterior_structures():
+        raise LaplaceStructureError(
+            f"laplace: sweep plan cannot serve a '{structure}' posterior "
+            f"(plan: {plan.describe()}); add DiagGGN/DiagGGNMC for 'diag' "
+            "or KFLR/KFAC for 'kron'")
+
+
+def _inv_sqrt_psd(M):
+    """Symmetric inverse square root of an SPD matrix via eigh."""
+    w, U = jnp.linalg.eigh(M)
+    return (U * jax.lax.rsqrt(jnp.maximum(w, 1e-30))) @ U.T
+
+
+def _cov_half(M):
+    """L with L Lᵀ = M⁻¹ for SPD M (eigh-based)."""
+    w, U = jnp.linalg.eigh(M)
+    return U * jax.lax.rsqrt(jnp.maximum(w, 1e-30))
+
+
+def _logdet(M):
+    if M.ndim == 1:
+        return jnp.sum(jnp.log(jnp.maximum(M, 1e-30)))
+    return jnp.linalg.slogdet(M)[1]
+
+
+# ---------------------------------------------------------------------------
+# shared evidence plumbing
+# ---------------------------------------------------------------------------
+
+
+class _EvidenceMixin:
+    """Evidence pieces common to every Gaussian posterior here.
+
+    Subclasses are dataclasses providing ``mean`` / ``n_data`` /
+    ``loss_map`` / ``likelihood`` / ``n_outputs`` / ``prior_prec`` /
+    ``sigma_noise`` fields; only the structure-specific
+    ``log_det_ratio`` / sampling / predictive hooks live on them.
+    """
+
+    def _curv_scale(self, sigma_noise=None):
+        """Mean-loss curvature → sum-loss likelihood Hessian: M (/σ²)."""
+        s = jnp.asarray(self.sigma_noise if sigma_noise is None
+                        else sigma_noise, jnp.float32)
+        return (jnp.float32(self.n_data) / (s * s)
+                if self.likelihood == "regression"
+                else jnp.float32(self.n_data))
+
+    def n_params(self) -> int:
+        return int(sum(l.size for l in jax.tree.leaves(self.mean)))
+
+    def scatter(self, prior_prec=None):
+        d = self.prior_prec if prior_prec is None else prior_prec
+        sq = sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                 for l in jax.tree.leaves(self.mean))
+        return jnp.asarray(d, jnp.float32) * sq
+
+    def log_lik(self, sigma_noise=None):
+        s = jnp.asarray(self.sigma_noise if sigma_noise is None
+                        else sigma_noise, jnp.float32)
+        m = jnp.float32(self.n_data)
+        if self.likelihood == "regression":
+            n_out = jnp.float32(self.n_data * self.n_outputs)
+            return (-m * self.loss_map / (s * s) - n_out * jnp.log(s)
+                    - 0.5 * n_out * jnp.log(2.0 * jnp.pi))
+        return -m * self.loss_map
+
+
+# ---------------------------------------------------------------------------
+# diagonal posterior
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DiagLaplace(_EvidenceMixin):
+    """Diagonal-precision Laplace posterior.
+
+    ``curv`` is the engine's mean-loss GGN diagonal tree (structure aligned
+    with ``mean``); the likelihood scale ``n_data/σ²`` and the prior ``δ``
+    are applied lazily so prior precision and observation noise can be
+    re-tuned (marglik) without re-running the sweep.
+    """
+
+    mean: Any
+    curv: Any
+    n_data: float
+    loss_map: float
+    likelihood: str = "classification"
+    n_outputs: int = 1
+    prior_prec: float = 1.0
+    sigma_noise: float = 1.0
+
+    structure: ClassVar[str] = "diag"
+
+    # -- fitting -------------------------------------------------------------
+
+    @classmethod
+    def fit(cls, model, params, x, y, loss, *, mc: bool = False,
+            prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
+            rng=None, extensions=None):
+        cfg, extensions, rng = _fit_args(
+            cfg, extensions, rng, mc, default=(DiagGGNMC,) if mc else (DiagGGN,))
+        _require_structure("diag", extensions, cfg)
+        res = eng.run(model, params, x, y, loss, extensions=extensions,
+                      cfg=cfg, rng=rng)
+        name = "diag_ggn_mc" if "diag_ggn_mc" in res.ext else "diag_ggn"
+        curv = res.ext[name]
+        try:
+            curv = jax.tree.map(
+                lambda p, c: c.astype(jnp.float32), params, curv)
+        except ValueError as e:
+            raise LaplaceStructureError(
+                "DiagLaplace: curvature tree does not cover every parameter "
+                f"({e}); the engine emits GGN diagonals for "
+                "Dense/Conv2d/Embedding/norm layers — for other models fit "
+                "with last_layer=True") from None
+        return cls(mean=params, curv=curv, n_data=_n_units(loss, y),
+                   loss_map=float(res.loss), likelihood=_likelihood_of(loss),
+                   n_outputs=int(res.logits.shape[-1]),
+                   prior_prec=float(prior_prec))
+
+    # -- evidence pieces (closed form) ---------------------------------------
+
+    def precision(self, prior_prec=None, sigma_noise=None):
+        """Posterior precision tree: curv·(M/σ²) + δ."""
+        d = self.prior_prec if prior_prec is None else prior_prec
+        scale = self._curv_scale(sigma_noise)
+        return jax.tree.map(lambda c: c * scale + d, self.curv)
+
+    def log_det_ratio(self, prior_prec=None, sigma_noise=None):
+        """log det P − P_dim · log δ  (the evidence's Occam term)."""
+        d = self.prior_prec if prior_prec is None else prior_prec
+        prec = self.precision(prior_prec, sigma_noise)
+        ld = sum(jnp.sum(jnp.log(l)) for l in jax.tree.leaves(prec))
+        return ld - self.n_params() * jnp.log(jnp.asarray(d, jnp.float32))
+
+    # -- sampling ------------------------------------------------------------
+
+    def sample(self, key, n_samples: int = 1):
+        """Posterior samples as a params tree with leading axis K."""
+        prec = self.precision()
+        leaves, treedef = jax.tree_util.tree_flatten(self.mean)
+        p_leaves = jax.tree.leaves(prec)
+        keys = jax.random.split(key, len(leaves))
+        out = []
+        for m, p, k in zip(leaves, p_leaves, keys):
+            eps = jax.random.normal(k, (n_samples,) + m.shape, jnp.float32)
+            out.append(m.astype(jnp.float32)[None]
+                       + eps * jax.lax.rsqrt(p)[None])
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- predictive hooks (consumed by laplace.predictive) -------------------
+
+    def cov_diag(self, curv_leaf):
+        """Elementwise posterior variance for one parameter leaf."""
+        scale = self._curv_scale(self.sigma_noise)
+        return 1.0 / (curv_leaf * scale + self.prior_prec)
+
+    def layer_blocks(self):
+        return self.curv
+
+
+# ---------------------------------------------------------------------------
+# Kronecker posterior
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KronLaplace(_EvidenceMixin):
+    """Kronecker-factored Laplace posterior (π-damped, App. C.3).
+
+    ``kron`` is the engine's KFLR/KFAC stats tree: per layer
+    ``{'w': {'A': [a,a] | 'A_diag': [a], 'B': [b,b]}, 'b': {'B': [b,b]}}``.
+    ``A`` keeps the engine's per-unit normalization; ``B`` is scaled by
+    ``n_data/σ²`` at use time so the block approximates the sum-loss GGN.
+    """
+
+    mean: Any
+    kron: Any
+    n_data: float
+    loss_map: float
+    likelihood: str = "classification"
+    n_outputs: int = 1
+    prior_prec: float = 1.0
+    sigma_noise: float = 1.0
+
+    structure: ClassVar[str] = "kron"
+
+    @classmethod
+    def fit(cls, model, params, x, y, loss, *, mc: bool = False,
+            prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
+            rng=None, extensions=None):
+        cfg, extensions, rng = _fit_args(
+            cfg, extensions, rng, mc, default=(KFAC,) if mc else (KFLR,))
+        _require_structure("kron", extensions, cfg)
+        res = eng.run(model, params, x, y, loss, extensions=extensions,
+                      cfg=cfg, rng=rng)
+        name = "kfac" if "kfac" in res.ext else "kflr"
+        kron_tree = res.ext[name]
+        # Validate coverage (and surface the actionable message now, not at
+        # the first solve): every param leaf must own a Kronecker block.
+        _map_kron(lambda m, b: None, params, kron_tree)
+        return cls(mean=params, kron=kron_tree, n_data=_n_units(loss, y),
+                   loss_map=float(res.loss), likelihood=_likelihood_of(loss),
+                   n_outputs=int(res.logits.shape[-1]),
+                   prior_prec=float(prior_prec))
+
+    # -- damped factors ------------------------------------------------------
+
+    def damped_factors(self, block, prior_prec=None, sigma_noise=None):
+        """π-damped posterior-precision factors for one block.
+
+        Weight blocks return ``(A', B')`` with ``P ≈ A' ⊗ B'``; bias blocks
+        (no A factor) return ``(None, M·B/σ² + δ I)`` — the
+        ``kron_solve_bias`` convention.
+        """
+        d = self.prior_prec if prior_prec is None else prior_prec
+        s = self.sigma_noise if sigma_noise is None else sigma_noise
+        B = block["B"].astype(jnp.float32) * self._curv_scale(s)
+        if B.ndim != 2:
+            raise LaplaceStructureError(
+                "KronLaplace: scan-stacked Kronecker factors (B.ndim==3) "
+                "are not supported — fit with last_layer=True")
+        A = block.get("A", block.get("A_diag"))
+        eye_b = jnp.eye(B.shape[0], dtype=jnp.float32)
+        if A is None:
+            return None, B + jnp.asarray(d, jnp.float32) * eye_b
+        A = A.astype(jnp.float32)
+        pi = K.pi_factor(A, B)
+        sd = jnp.sqrt(jnp.asarray(d, jnp.float32))
+        if A.ndim == 1:
+            Ad = A + pi * sd
+        else:
+            Ad = A + pi * sd * jnp.eye(A.shape[0], dtype=jnp.float32)
+        return Ad, B + (sd / pi) * eye_b
+
+    # -- evidence pieces (closed form) ---------------------------------------
+
+    def log_det_ratio(self, prior_prec=None, sigma_noise=None):
+        """Closed form: logdet(A'⊗B') = b·logdet A' + a·logdet B'."""
+        d = self.prior_prec if prior_prec is None else prior_prec
+        terms = []
+
+        def block_ld(mean_leaf, block):
+            Ad, Bd = self.damped_factors(block, prior_prec, sigma_noise)
+            if Ad is None:
+                terms.append(_logdet(Bd))
+            else:
+                a_dim, b_dim = Ad.shape[0], Bd.shape[0]
+                terms.append(b_dim * _logdet(Ad) + a_dim * _logdet(Bd))
+            return None
+
+        _map_kron(block_ld, self.mean, self.kron)
+        return (sum(terms)
+                - self.n_params() * jnp.log(jnp.asarray(d, jnp.float32)))
+
+    # -- sampling ------------------------------------------------------------
+
+    def sample(self, key, n_samples: int = 1):
+        """θ = θ* + A'^{-1/2} E B'^{-1/2} per weight block (matrix normal);
+        vec-covariance is exactly (A'⊗B')⁻¹."""
+        counter = [0]
+
+        def block_sample(mean_leaf, block):
+            Ad, Bd = self.damped_factors(block)
+            k = jax.random.fold_in(key, counter[0])
+            counter[0] += 1
+            eps = jax.random.normal(
+                k, (n_samples,) + mean_leaf.shape, jnp.float32)
+            m = mean_leaf.astype(jnp.float32)[None]
+            SB = _inv_sqrt_psd(Bd)
+            if Ad is None:
+                return m + jnp.einsum("ij,kj->ki", SB, eps)
+            if Ad.ndim == 1:
+                half = eps * jax.lax.rsqrt(Ad)[None, :, None]
+            else:
+                half = jnp.einsum("ij,kjl->kil", _inv_sqrt_psd(Ad), eps)
+            return m + jnp.einsum("kil,lm->kim", half, SB)
+
+        return _map_kron(block_sample, self.mean, self.kron)
+
+    # -- predictive hooks ----------------------------------------------------
+
+    def cov_halves(self, block):
+        """(L_A, L_B) with L Lᵀ the damped factor inverses — the GLM
+        predictive's half-transforms (see kernels/predictive_var.py)."""
+        Ad, Bd = self.damped_factors(block)
+        if Ad is None or Ad.ndim == 1:
+            raise LaplaceStructureError(
+                "KronLaplace predictive needs dense A factors "
+                "(Dense/Conv2d weight blocks)")
+        return _cov_half(Ad), _cov_half(Bd)
+
+    def bias_cov(self, block):
+        _, Bd = self.damped_factors(block)
+        return jnp.linalg.inv(Bd)
+
+    def layer_blocks(self):
+        return self.kron
+
+
+# ---------------------------------------------------------------------------
+# last-layer restriction
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LastLayerLaplace:
+    """Laplace posterior over the final Dense layer only.
+
+    The feature extractor (everything before the head) stays a point
+    estimate; the engine sweep runs on the head alone with the extracted
+    features as inputs — the practical scope for large configs, where a
+    full-net sweep (or a full-net Kronecker eigendecomposition) is off the
+    table.
+    """
+
+    inner: Any        # Diag/Kron posterior over the head params
+    full_mean: Any    # full params tree (head included)
+
+    structure: ClassVar[str] = "last_layer"
+
+    @classmethod
+    def fit(cls, model, params, x, y, loss, *, structure: str = "kron",
+            mc: bool = False, **kw):
+        feats, head, f_params, h_params = split_last_dense(model, params)
+        phi = feats.apply(f_params, x)
+        inner_cls = {"diag": DiagLaplace, "kron": KronLaplace}.get(structure)
+        if inner_cls is None:
+            raise LaplaceStructureError(
+                f"LastLayerLaplace: unknown structure '{structure}' "
+                "(expected 'diag' or 'kron')")
+        inner = inner_cls.fit(head, h_params, phi, y, loss, mc=mc, **kw)
+        return cls(inner=inner, full_mean=params)
+
+    def features(self, model, params, x):
+        feats, _, f_params, _ = split_last_dense(model, params)
+        return feats.apply(f_params, x)
+
+    def sample(self, key, n_samples: int = 1):
+        """Full params tree with leading axis K: head sampled, rest tiled."""
+        head_samples = self.inner.sample(key, n_samples)
+        base = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_samples,) + l.shape),
+            tuple(self.full_mean[:-1]))
+        return base + (head_samples,)
+
+    # evidence of the restricted model: delegate to the inner posterior
+    def log_det_ratio(self, *a, **kw):
+        return self.inner.log_det_ratio(*a, **kw)
+
+    def scatter(self, *a, **kw):
+        return self.inner.scatter(*a, **kw)
+
+    def log_lik(self, *a, **kw):
+        return self.inner.log_lik(*a, **kw)
+
+    @property
+    def likelihood(self):
+        return self.inner.likelihood
+
+    @property
+    def prior_prec(self):
+        return self.inner.prior_prec
+
+    @property
+    def sigma_noise(self):
+        return self.inner.sigma_noise
+
+
+def split_last_dense(model, params):
+    """(features, head, f_params, h_params) for a Sequential ending in
+    Dense — the last-layer Laplace decomposition."""
+    if not isinstance(model, Sequential) or not model.mods:
+        raise LaplaceStructureError(
+            "LastLayerLaplace needs a Sequential model "
+            f"(got {type(model).__name__})")
+    if not isinstance(model.mods[-1], Dense):
+        raise LaplaceStructureError(
+            "LastLayerLaplace needs the final module to be Dense "
+            f"(got {type(model.mods[-1]).__name__}); reorder the head or "
+            "use a full-net DiagLaplace/KronLaplace fit")
+    feats = Sequential(model.mods[:-1])
+    return feats, model.mods[-1], tuple(params[:-1]), params[-1]
+
+
+# ---------------------------------------------------------------------------
+# convenience front door
+# ---------------------------------------------------------------------------
+
+
+def _fit_args(cfg, extensions, rng, mc, default):
+    """Shared fit plumbing: default extensions + deterministic MC seeding
+    (the ExtensionConfig.mc_seed path) when the caller passes no key."""
+    cfg = cfg or ExtensionConfig()
+    extensions = tuple(extensions) if extensions else default
+    needs_mc = any(e.sweep == "ggn_mc" for e in extensions)
+    if needs_mc and rng is None and cfg.mc_seed is None:
+        cfg = dataclasses.replace(cfg, mc_seed=0)
+    return cfg, extensions, rng
+
+
+def fit_posterior(model, params, x, y, loss, *, structure: str = "diag",
+                  last_layer: bool = False, **kw):
+    """Fit a Laplace posterior: structure 'diag' | 'kron', optionally
+    restricted to the last layer."""
+    if last_layer:
+        return LastLayerLaplace.fit(model, params, x, y, loss,
+                                    structure=structure, **kw)
+    cls = {"diag": DiagLaplace, "kron": KronLaplace}.get(structure)
+    if cls is None:
+        raise LaplaceStructureError(
+            f"fit_posterior: unknown structure '{structure}' "
+            "(expected 'diag' or 'kron')")
+    return cls.fit(model, params, x, y, loss, **kw)

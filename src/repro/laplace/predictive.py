@@ -1,0 +1,224 @@
+"""Posterior predictives: linearized (GLM) and MC-sampled.
+
+The GLM predictive linearizes the network at the MAP estimate, so the
+function-space predictive is Gaussian with
+
+    mean   = f(x; θ*)                      [N, C]
+    var    = diag(J(x) Σ J(x)ᵀ)            [N, C]
+
+where ``J`` is the Jacobian of the outputs w.r.t. the parameters and ``Σ``
+the fitted Laplace covariance.  ``J`` is obtained the BackPACK way — the
+engine's factor sweep with the **identity** over outputs in place of the
+loss-Hessian factor: propagating ``S₀[c] = e_c`` backward gives, at every
+Dense-shaped layer, the pair ``(A, S)`` whose contraction is that layer's
+Jacobian tile ``J[c,n] = Σ_r a_{n,r} s_{c,n,r}ᵀ``.
+
+The hot path — contracting those tiles against the posterior — is the
+fused ``predictive_var`` Pallas kernel (``repro.kernels.predictive_var``),
+which never materializes the per-sample Jacobian tensor ``[C, N, a, b]``:
+
+* diagonal Σ: the kernel weights the squared tile by the covariance
+  diagonal ``Sigma [a, b]``;
+* Kronecker Σ = (A'⁻¹ ⊗ B'⁻¹): the inputs are half-transformed outside
+  the kernel (``Ã = A L_A``, ``S̃ = S L_B`` with ``L Lᵀ`` the factor
+  inverses) and the quadratic form collapses to ``‖J̃‖²_F`` — the same
+  kernel without the weight.
+
+Rank-1 layers (R == 1) skip the kernel for closed forms, mirroring
+``dense_first_order_stats``; ``use_kernels=False`` keeps the naive
+per-sample-Jacobian einsum as the differential/benchmark baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.module import Dense, Sequential, _nra
+from repro.nn.layers import Conv2d
+
+from .posterior import (
+    DiagLaplace,
+    KronLaplace,
+    LaplaceStructureError,
+    LastLayerLaplace,
+    split_last_dense,
+)
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def _output_factor(z):
+    """Identity Jacobian seed over outputs: S₀ [C, N, C], S₀[c,n,:] = e_c."""
+    if z.ndim != 2:
+        raise LaplaceStructureError(
+            f"glm_predictive needs [N, C] outputs (got shape {z.shape}); "
+            "for sequence models slice features to one position and use the "
+            "last-layer posterior's head directly")
+    n, c = z.shape
+    eye = jnp.eye(c, dtype=jnp.float32)
+    return jnp.broadcast_to(eye[:, None, :], (c, n, c))
+
+
+# ---------------------------------------------------------------------------
+# per-layer variance contributions
+# ---------------------------------------------------------------------------
+
+
+def _diag_weight_var(cov_w, A, Sr, use_kernels):
+    """Σ_{ij} J[c,n,i,j]² σ²[i,j] for J = Σ_r a sᵀ."""
+    Af, Sf = _f32(A), _f32(Sr)
+    if A.shape[1] == 1:
+        # Rank-1 closed form: J = a sᵀ separates.
+        return jnp.einsum("na,ab,cnb->cn", Af[:, 0] ** 2, cov_w,
+                          Sf[:, :, 0] ** 2)
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.predictive_var(Af, Sf, cov_w)
+    from repro.kernels import ref
+
+    return ref.predictive_var(Af, Sf, cov_w)
+
+
+def _kron_weight_var(LA, LB, A, Sr, use_kernels):
+    """‖L_Aᵀ J L_B‖²_F via half-transformed inputs (see module doc)."""
+    At = _f32(A) @ LA
+    St = _f32(Sr) @ LB
+    if A.shape[1] == 1:
+        return (jnp.sum(At[:, 0] ** 2, -1)[None]
+                * jnp.sum(St[:, :, 0] ** 2, -1))
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        return kops.predictive_var(At, St)
+    from repro.kernels import ref
+
+    return ref.predictive_var(At, St)
+
+
+def _layer_var(post, blocks, A, Sr, bias, use_kernels):
+    """Variance contribution [C, N] of one Dense-shaped layer."""
+    if isinstance(post, DiagLaplace):
+        var = _diag_weight_var(post.cov_diag(blocks["w"]), A, Sr, use_kernels)
+        if bias:
+            ssum = jnp.sum(_f32(Sr), axis=2)  # [C, N, b]
+            var = var + jnp.einsum("cnb,b->cn", ssum * ssum,
+                                   post.cov_diag(blocks["b"]))
+        return var
+    if isinstance(post, KronLaplace):
+        LA, LB = post.cov_halves(blocks["w"])
+        var = _kron_weight_var(LA, LB, A, Sr, use_kernels)
+        if bias:
+            ssum = jnp.sum(_f32(Sr), axis=2)
+            cov_b = post.bias_cov(blocks["b"])
+            var = var + jnp.einsum("cni,ij,cnj->cn", ssum, cov_b, ssum)
+        return var
+    raise LaplaceStructureError(
+        f"glm_predictive: unsupported posterior {type(post).__name__}")
+
+
+def _var_sweep(module, params, tape, S, blocks, post, use_kernels, var):
+    """Backward Jacobian-factor sweep accumulating per-layer variance."""
+    if isinstance(module, Dense):
+        A = _nra(tape)
+        c = S.shape[0]
+        Sr = S.reshape((c,) + A.shape[:2] + (module.d_out,))
+        var = var + _layer_var(post, blocks, A, Sr, module.use_bias,
+                               use_kernels)
+        return module.jac_t_mat(params, tape, S), var
+    if isinstance(module, Conv2d):
+        pat, (hh, ww) = module._unfold(tape)
+        c = S.shape[0]
+        Sr = S.reshape(c, S.shape[1], hh * ww, module.c_out)
+        var = var + _layer_var(post, blocks, pat, Sr, module.use_bias,
+                               use_kernels)
+        return module.jac_t_mat(params, tape, S), var
+    if not jax.tree_util.tree_leaves(params):
+        # Parameter-free module: propagate the factor, no contribution.
+        return module.jac_t_mat(params, tape, S), var
+    if isinstance(module, Sequential):
+        for m, p, t, blk in reversed(
+                list(zip(module.mods, params, tape, blocks))):
+            S, var = _var_sweep(m, p, t, S, blk, post, use_kernels, var)
+        return S, var
+    raise LaplaceStructureError(
+        f"glm_predictive: unsupported parameterized module "
+        f"{type(module).__name__} in a full-net sweep; fit with "
+        "last_layer=True instead")
+
+
+# ---------------------------------------------------------------------------
+# public predictives
+# ---------------------------------------------------------------------------
+
+
+def _dense_glm_closed_form(head, params, post, x):
+    """GLM predictive of a bare Dense head, no Jacobian seed.
+
+    The head Jacobian w.r.t. (W, b) at sample n is rank-1 (``x_n ⊗ e_c``),
+    so the variance is a bilinear form that never needs the ``[C, N, C]``
+    identity seed the generic sweep propagates — the difference between
+    O(N·a·C) and O(N·C²) memory, which is what makes last-layer
+    uncertainty feasible at LM-vocabulary scale (diag structure; the
+    Kronecker path still owns [C, C] factors by construction).
+    """
+    z = head.apply(params, x)
+    xf = _f32(x)
+    blocks = post.layer_blocks()
+    if isinstance(post, DiagLaplace):
+        var = (xf * xf) @ post.cov_diag(blocks["w"])        # [N, C]
+        if head.use_bias:
+            var = var + post.cov_diag(blocks["b"])[None]
+        return z, var
+    if isinstance(post, KronLaplace):
+        LA, LB = post.cov_halves(blocks["w"])
+        q = jnp.sum((xf @ LA) ** 2, axis=-1)                # x Acov xᵀ, [N]
+        b_diag = jnp.sum(LB * LB, axis=-1)                  # diag(Bcov), [C]
+        var = q[:, None] * b_diag[None]
+        if head.use_bias:
+            var = var + jnp.diagonal(post.bias_cov(blocks["b"]))[None]
+        return z, var
+    raise LaplaceStructureError(
+        f"glm_predictive: unsupported posterior {type(post).__name__}")
+
+
+def glm_predictive(model, params, posterior, x, *, use_kernels: bool = True):
+    """Linearized predictive: (mean [N, C], variance [N, C]).
+
+    For regression posteriors the variance is the function-space
+    ``diag(J Σ Jᵀ)``; add ``sigma_noise²`` for the observation predictive.
+    """
+    if isinstance(posterior, LastLayerLaplace):
+        feats, head, f_params, h_params = split_last_dense(model, params)
+        phi = feats.apply(f_params, x)
+        return glm_predictive(head, h_params, posterior.inner, phi,
+                              use_kernels=use_kernels)
+    if isinstance(model, Dense) and x.ndim == 2:
+        # Bare Dense head (the last-layer path): closed form, no seed.
+        return _dense_glm_closed_form(model, params, posterior, x)
+    z, tape = model.forward_tape(params, x)
+    S0 = _output_factor(z)
+    var0 = jnp.zeros((z.shape[-1], z.shape[0]), jnp.float32)
+    _, var = _var_sweep(model, params, tape, S0,
+                        posterior.layer_blocks(), posterior, use_kernels,
+                        var0)
+    return z, var.T
+
+
+def mc_predictive(model, params, posterior, x, key, n_samples: int = 30):
+    """Monte-Carlo predictive over posterior weight samples:
+    (mean [N, C], variance [N, C]) of the sampled outputs."""
+    thetas = posterior.sample(key, n_samples)
+    zs = jax.vmap(lambda p: model.apply(p, x))(thetas)
+    zs = _f32(zs)
+    return jnp.mean(zs, axis=0), jnp.var(zs, axis=0)
+
+
+def probit_predictive(mean, var):
+    """MacKay's probit-corrected softmax: the closed-form approximation of
+    E[softmax(f)] under f ~ N(mean, diag(var)) — calibrated class
+    probabilities from the GLM predictive."""
+    kappa = jax.lax.rsqrt(1.0 + (jnp.pi / 8.0) * _f32(var))
+    return jax.nn.softmax(_f32(mean) * kappa, axis=-1)

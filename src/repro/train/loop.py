@@ -29,6 +29,15 @@ class LoopConfig:
     log_every: int = 10
     seed: int = 0
     batch_override: Optional[int] = None
+    # Online marginal-likelihood callback (repro.laplace): every
+    # ``marglik_every`` steps, fit a last-layer Laplace posterior on the
+    # current batch (MC curvature — LM vocabularies rule out the exact
+    # factor) and tune the prior precision by evidence ascent.  The
+    # evidence and tuned prior land in that step's metrics/history —
+    # curvature-backed generalization telemetry riding the training loop.
+    marglik_every: Optional[int] = None
+    marglik_structure: str = "kron"   # 'diag' | 'kron'
+    marglik_steps: int = 20           # evidence-ascent steps per callback
 
 
 def fit(model, cfg, shape, opt, loop: LoopConfig,
@@ -56,6 +65,7 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
 
     wd = Watchdog()
     history = []
+    marglik_ok = True  # flips off after the first unsupported-model error
     for step in range(start_step, loop.steps):
         if injector is not None:
             injector.check(step)
@@ -72,6 +82,10 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
         metrics = {k: float(v) for k, v in metrics.items()}
         dur = time.monotonic() - t0
         wd.beat(step, dur)
+        if (loop.marglik_every and marglik_ok
+                and (step + 1) % loop.marglik_every == 0):
+            marglik_ok = _marglik_callback(model, params, batch, loss, loop,
+                                           step, metrics, log_fn)
         history.append(metrics)
         if step % loop.log_every == 0:
             log_fn(f"step {step:5d} loss {metrics['loss']:.4f} "
@@ -81,3 +95,26 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
     if loop.ckpt_dir:
         ckpt.save(loop.ckpt_dir, loop.steps, params, opt_state)
     return params, opt_state, history, wd
+
+
+def _marglik_callback(model, params, batch, loss, loop: LoopConfig, step,
+                      metrics, log_fn) -> bool:
+    """Fit + tune a last-layer Laplace posterior on the current batch and
+    record the evidence; returns False (disabling the callback) when the
+    model structure is unsupported."""
+    from repro import laplace
+
+    try:
+        post = laplace.fit_posterior(
+            model, params, batch["inputs"], batch["labels"], loss,
+            structure=loop.marglik_structure, last_layer=True, mc=True,
+            cfg=ExtensionConfig(mc_seed=loop.seed + step))
+    except laplace.LaplaceStructureError as e:
+        log_fn(f"[marglik] disabled: {e}")
+        return False
+    post, res = laplace.optimize_marglik(post, n_steps=loop.marglik_steps)
+    metrics["marglik"] = float(laplace.log_marglik(post))
+    metrics["prior_prec"] = res.prior_prec
+    log_fn(f"[marglik] step {step:5d} log-evidence {metrics['marglik']:.1f} "
+           f"prior_prec {res.prior_prec:.3g}")
+    return True
