@@ -21,8 +21,12 @@ wrong for this pairing):
   per-layer contraction) on a sequence model with a fused-regime hidden
   layer, fused vs naive per-sample-Jacobian path.
 
-``main`` also dumps its rows to the repo-root ``BENCH_laplace.json`` so
-the Laplace perf trajectory accumulates in-repo across PRs.
+``main`` also dumps its rows to ``BENCH_laplace.json`` so the Laplace
+perf trajectory accumulates in-repo across PRs — at the repo root for
+local runs, or under ``$BENCH_OUT_DIR`` when set.  CI sets the latter:
+runners must never mutate the *committed* baseline in place (the
+refreshed file is uploaded as an artifact only, and the committed copy
+is what the bench-regression gate diffs against).
 """
 from __future__ import annotations
 
@@ -133,10 +137,14 @@ def main():
     _fit_lanes()
     _predvar_lanes()
     _glm_lanes()
-    # Repo-root perf-trajectory artifact: this module's rows, refreshed on
-    # every run (git history carries the trajectory).
+    # Perf-trajectory artifact: this module's rows, refreshed on every run
+    # (git history carries the trajectory for local runs; CI redirects to
+    # an output dir via BENCH_OUT_DIR and uploads it as an artifact so the
+    # committed baseline is never mutated on a runner).
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    path = os.path.join(root, "BENCH_laplace.json")
+    out_dir = os.environ.get("BENCH_OUT_DIR") or root
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "BENCH_laplace.json")
     with open(path, "w") as f:
         json.dump({"quick": quick_mode(), "rows": ROWS[start:]}, f, indent=2)
     print(f"# wrote {len(ROWS) - start} laplace rows to {path}")

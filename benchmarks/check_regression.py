@@ -1,0 +1,99 @@
+"""Bench-regression gate: diff a fresh bench JSON against its committed
+repo-root ``BENCH_*.json`` baseline and fail on fused-lane slowdowns.
+
+The bench-smoke CI job runs each suite in ``--quick`` mode and then calls
+this once per (fresh JSON, committed baseline) pair; a gated lane slower
+than ``threshold ×`` its baseline fails the job.  Only the *fused* lanes
+are gated by default — they are the claims this repo makes; the naive /
+per-extension baselines are allowed to drift (they exist to be beaten,
+and gating them would double the noise surface).  A gated lane that
+disappears from the fresh run also fails: renaming a lane must come with
+a baseline refresh, otherwise the gate silently thins out.
+
+Baselines are quick-mode runs committed at the repo root
+(``BENCH_smoke_fused.json`` etc.).  CI-runner vs. baseline-machine skew is
+what the 1.5× headroom is for; a genuine fused-lane regression (a kernel
+losing its fusion, a dispatch cache miss per step) shows up as 2–20×.
+
+Usage::
+
+    python -m benchmarks.check_regression CURRENT BASELINE \
+        [--threshold 1.5] [--pattern '/fused(/|$)']
+
+(The default pattern matches a ``fused`` *path segment* — lane names like
+``fused_second_order/baseline/...`` carry the module prefix but are
+baselines, not fused lanes.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+
+def load_rows(path):
+    """``{lane name: us_per_call}`` from a bench JSON (bare row list or
+    the ``{"quick": ..., "rows": [...]}`` artifact form)."""
+    with open(path) as f:
+        data = json.load(f)
+    rows = data["rows"] if isinstance(data, dict) else data
+    return {r["name"]: float(r["us_per_call"]) for r in rows}
+
+
+def check(current, baseline, threshold, pattern):
+    """Compare gated lanes; returns (failures, checked) name lists."""
+    pat = re.compile(pattern)
+    failures, checked = [], []
+    for name, base_us in sorted(baseline.items()):
+        if not pat.search(name):
+            continue
+        if name not in current:
+            print(f"FAIL {name}: gated lane missing from current run "
+                  "(rename requires a baseline refresh)")
+            failures.append(name)
+            continue
+        ratio = current[name] / base_us
+        ok = ratio <= threshold
+        print(f"{'ok  ' if ok else 'FAIL'} {name}: {current[name]:.1f}us "
+              f"vs baseline {base_us:.1f}us "
+              f"(x{ratio:.2f}, limit x{threshold})")
+        checked.append(name)
+        if not ok:
+            failures.append(name)
+    for name in sorted(set(current) - set(baseline)):
+        if pat.search(name):
+            print(f"note {name}: new gated lane (not in baseline — refresh "
+                  "the committed BENCH_*.json to start gating it)")
+    return failures, checked
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("current", help="fresh bench JSON (this run)")
+    ap.add_argument("baseline", help="committed repo-root BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when current/baseline exceeds this (1.5)")
+    ap.add_argument("--pattern", default="/fused(/|$)",
+                    help="regex selecting gated lane names "
+                         "('/fused(/|$)': fused path segments only)")
+    args = ap.parse_args(argv)
+    current = load_rows(args.current)
+    baseline = load_rows(args.baseline)
+    failures, checked = check(current, baseline, args.threshold, args.pattern)
+    if not checked and not failures:
+        print(f"FAIL: no lanes matching '{args.pattern}' in {args.baseline}")
+        return 1
+    if failures:
+        print(f"bench-regression gate: {len(failures)} failure(s) "
+              f"of {len(checked) + len(failures)} gated lane(s)")
+        return 1
+    print(f"bench-regression gate: {len(checked)} gated lane(s) within "
+          f"x{args.threshold}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

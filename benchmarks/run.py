@@ -16,8 +16,13 @@ smaller shapes where a benchmark defines them (currently ``fused``).
   fused     fused first-order kernel vs per-extension    (ISSUE 1 tentpole)
   laplace   posterior fit + fused predictive-variance
             kernel vs naive Jacobian baseline; also
-            refreshes repo-root BENCH_laplace.json       (ISSUE 3 tentpole)
+            refreshes BENCH_laplace.json (repo root, or
+            $BENCH_OUT_DIR when set — CI artifact mode)  (ISSUE 3 tentpole)
   roofline  dry-run roofline table                       (deliverable g)
+
+CI's bench-smoke job gates the fused lanes against the committed
+quick-mode ``BENCH_smoke_*.json`` baselines via
+``benchmarks.check_regression`` (>1.5× slowdown fails the job).
 
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--quick] [--json OUT]
 [names...]``

@@ -31,6 +31,7 @@ from .extensions import (
     Variance,
     by_name,
     first_order_mask,
+    reduce_spec,
     second_order_mask,
 )
 from .loss_hessian import CrossEntropyLoss, MSELoss
@@ -53,5 +54,12 @@ from .module import (
     per_sample_l2,
     per_sample_sq_sum,
 )
-from .engine import Results, SweepPlan, loss_and_grad, plan_sweeps, run
+from .engine import (
+    Results,
+    ShardedSweepPlan,
+    SweepPlan,
+    loss_and_grad,
+    plan_sweeps,
+    run,
+)
 from . import kron, oracle

@@ -32,13 +32,21 @@ from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.5 exposes it at top level
+    from jax import shard_map as _shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 from .extensions import (
     Extension,
     ExtensionConfig,
     FusedMask,
     FusedSecondMask,
+    by_name,
     first_order_mask,
+    reduce_spec,
     second_order_mask,
     sweeps_needed,
 )
@@ -110,6 +118,20 @@ class SweepPlan:
         return tuple(out)
 
 
+    def shard(self, mesh, axes=("data",)) -> "ShardedSweepPlan":
+        """Bind this plan to a device mesh: the batch-sharded sweep lane.
+
+        ``axes`` names the mesh axis (or axes) the batch is split over;
+        the returned :class:`ShardedSweepPlan` runs the same sweeps under
+        ``shard_map`` — fused kernels on each shard's local batch, then
+        the per-extension ``reduce`` specs combine the shards (see
+        ``ShardedSweepPlan.describe()`` for the placement report).
+        """
+        if isinstance(axes, str):
+            axes = (axes,)
+        return ShardedSweepPlan(plan=self, mesh=mesh, axes=tuple(axes))
+
+
 def plan_sweeps(extensions: Sequence[Extension],
                 cfg: Optional[ExtensionConfig] = None) -> SweepPlan:
     """Build the static sweep plan for a set of requested extensions."""
@@ -175,6 +197,259 @@ def _zip_stats(fn, st, gr):
     return fn(st, gr)
 
 
+# ---------------------------------------------------------------------------
+# batch-sharded sweep lane (SweepPlan.shard)
+# ---------------------------------------------------------------------------
+
+
+def _axis_count(axes):
+    """Number of shards over the named mesh axes (inside shard_map)."""
+    return jax.lax.psum(1, tuple(axes))
+
+
+def _global_sample_offset(axes, n_local):
+    """Global index of this shard's first sample.
+
+    ``shard_map`` splits axis 0 major-to-minor over ``axes``; the linear
+    shard index times the local batch recovers the single-device sample
+    numbering (what the per-sample MC streams are keyed on).
+    """
+    idx = 0
+    for ax in axes:
+        idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    return idx * n_local
+
+
+class _ShardScaledLoss:
+    """Loss adapter for the sharded sweep body (inside ``shard_map``).
+
+    Every loss here normalizes by the number M of sample units; a shard
+    only sees its local units, so its cotangents/factors come out scaled
+    by 1/M_local instead of 1/M_global.  This adapter psums M over the
+    data axes and rescales — per-sample quantities then match their
+    single-device counterparts exactly, even when padding masks leave the
+    unit counts uneven across shards.  MC factors additionally get the
+    shard's global sample offset so the per-sample PRNG streams line up
+    with the single-device draws.
+    """
+
+    def __init__(self, base, axes):
+        self.base = base
+        self.axes = tuple(axes)
+
+    def __getattr__(self, name):
+        return getattr(self.base, name)
+
+    def _m(self, y):
+        # num_units is the *raw* count — a fully padded shard reports 0.
+        # The local clamp must mirror the base loss's own ≥1 clamp (that
+        # is what its outputs were divided by); the global clamp only
+        # guards the degenerate everything-masked batch.
+        raw = self.base.num_units(y)
+        ml = jnp.maximum(raw, 1.0)
+        mg = jnp.maximum(jax.lax.psum(raw, self.axes), 1.0)
+        return ml, mg
+
+    def value(self, z, y):
+        ml, mg = self._m(y)
+        return jax.lax.psum(self.base.value(z, y) * ml, self.axes) / mg
+
+    def grad(self, z, y):
+        ml, mg = self._m(y)
+        g = self.base.grad(z, y)
+        return (g.astype(jnp.float32) * (ml / mg)).astype(g.dtype)
+
+    def n_exact_cols(self, z):
+        return self.base.n_exact_cols(z)
+
+    def sqrt_hessian(self, z, y):
+        return self.sqrt_hessian_chunk(z, y, 0, self.n_exact_cols(z))
+
+    def sqrt_hessian_chunk(self, z, y, lo, size):
+        ml, mg = self._m(y)
+        S = self.base.sqrt_hessian_chunk(z, y, lo, size)
+        return (S.astype(jnp.float32) * jnp.sqrt(ml / mg)).astype(S.dtype)
+
+    def sqrt_hessian_mc(self, rng, z, y, k=1, sample_offset=0):
+        ml, mg = self._m(y)
+        off = sample_offset + _global_sample_offset(self.axes, z.shape[0])
+        S = self.base.sqrt_hessian_mc(rng, z, y, k, sample_offset=off)
+        return (S.astype(jnp.float32) * jnp.sqrt(ml / mg)).astype(S.dtype)
+
+    def hessian_mean(self, z, y):
+        ml, mg = self._m(y)
+        return jax.lax.psum(self.base.hessian_mean(z, y) * ml, self.axes) / mg
+
+
+def _chan_merge(a, b):
+    """Merge two (count, mean, M2) triples — Chan et al.'s pairwise update."""
+    na, ma, m2a = a
+    nb, mb, m2b = b
+    n = na + nb
+    d = mb - ma
+    mean = ma + d * (nb / n)
+    m2 = m2a + m2b + d * d * (na * nb / n)
+    return n, mean, m2
+
+
+def _sharded_variance(sum_g2, grad_local, n_local, axes):
+    """Global gradient variance across shards, moment-merge style.
+
+    Each shard contributes its local (Σg, Σg²) as a (count, mean, M2)
+    triple; a binary tree of :func:`_chan_merge` steps combines the
+    all-gathered triples without ever forming the catastrophically
+    cancelling global Σg² − (Σg)²/n difference between large
+    intermediates.  The result ``n·M2`` equals the engine's single-device
+    ``n·Σg² − (Σg)²`` in exact arithmetic.
+    """
+    g1 = jax.lax.all_gather(grad_local.astype(jnp.float32), tuple(axes))
+    g2 = jax.lax.all_gather(sum_g2, tuple(axes))
+    nl = jnp.float32(n_local)
+    parts = [(nl, g1[i] / nl, g2[i] - g1[i] ** 2 / nl)
+             for i in range(g1.shape[0])]
+    while len(parts) > 1:
+        merged = [_chan_merge(parts[i], parts[i + 1])
+                  for i in range(0, len(parts) - 1, 2)]
+        if len(parts) % 2:
+            merged.append(parts[-1])
+        parts = merged
+    n, _, m2 = parts[0]
+    return n * m2
+
+
+def _kron_reduce(tree, axes):
+    """Kronecker-factor reducer: A factors are batch *means* (pmean), B
+    factors batch sums (psum); Embedding's diagonal ``A_diag`` reduces
+    like ``A``."""
+
+    def rec(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in ("A", "A_diag"):
+                    out[k] = jax.tree.map(
+                        lambda x: jax.lax.pmean(x, axes), v)
+                elif k == "B":
+                    out[k] = jax.tree.map(lambda x: jax.lax.psum(x, axes), v)
+                else:
+                    out[k] = rec(v)
+            return out
+        if isinstance(node, (tuple, list)):
+            return tuple(rec(c) for c in node)
+        return node
+
+    return rec(tree)
+
+
+def _reduce_sharded(grads, ext, extensions, axes):
+    """Apply each extension's declared cross-shard reducer (inside
+    shard_map).  'concat'/'gram' stats stay shard-local — the sharded
+    out-specs concatenate their sample rows — and 'moment_merge' outputs
+    are already global (see :func:`_sharded_variance`)."""
+    red = reduce_spec(extensions)
+    out = {}
+    for name, tree in ext.items():
+        kind = red.get(name, "psum")
+        if kind == "psum":
+            out[name] = jax.tree.map(lambda x: jax.lax.psum(x, axes), tree)
+        elif kind == "pmean":
+            out[name] = jax.tree.map(lambda x: jax.lax.pmean(x, axes), tree)
+        elif kind == "kron":
+            out[name] = _kron_reduce(tree, axes)
+        else:
+            out[name] = tree
+    grads = jax.tree.map(lambda x: jax.lax.psum(x, axes), grads)
+    return grads, out
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSweepPlan:
+    """A :class:`SweepPlan` bound to a device mesh — the batch-sharded lane.
+
+    ``run`` wraps the whole engine sweep in ``shard_map`` over the data
+    axes: the forward/backward (and the fused Pallas kernel launches
+    inside it) run on each device's local batch shard, then the
+    per-extension ``reduce`` specs combine the shards — psum for
+    batch-summed curvature, pmean/psum factor pairs for KFAC/KFLR,
+    all-gathered Gram rows for pairwise dots, a pairwise moment merge for
+    the variance, and plain row concatenation (via the sharded out-specs)
+    for per-sample statistics.  Results are numerically equivalent to the
+    single-device sweep (exactly, up to accumulation order).
+    """
+
+    plan: SweepPlan
+    mesh: Any
+    axes: tuple
+
+    # reducers whose outputs keep shard-local sample rows (sharded axis 0)
+    _LOCAL_ROWS = ("concat", "gram")
+
+    @property
+    def n_shards(self) -> int:
+        s = 1
+        for ax in self.axes:
+            s *= self.mesh.shape[ax]
+        return s
+
+    def reduce_specs(self) -> dict:
+        """``{extension name: cross-shard reducer}`` for this plan."""
+        return reduce_spec([by_name(n) for n in sorted(self.plan.names)])
+
+    def describe(self) -> str:
+        red = self.reduce_specs()
+        placement = ", ".join(
+            f"{n}:{k}->" +
+            ("sharded(axis0)" if k in self._LOCAL_ROWS else "replicated")
+            for n, k in sorted(red.items()))
+        mesh_shape = dict(zip(self.mesh.axis_names,
+                              self.mesh.devices.shape))
+        return (f"{self.plan.describe()} | shard_axes={list(self.axes)} "
+                f"shards={self.n_shards} mesh={mesh_shape} "
+                f"reduce=[{placement}] "
+                f"grads:psum->replicated logits:concat->sharded(axis0)")
+
+    def run(self, model, params, inputs, targets, loss,
+            cfg: Optional[ExtensionConfig] = None,
+            rng: Optional[jax.Array] = None) -> Results:
+        """The sharded analogue of :func:`run` — same signature minus
+        ``extensions`` (the plan carries them), same Results contract."""
+        cfg = dataclasses.replace(cfg or ExtensionConfig(),
+                                  shard_axes=tuple(self.axes))
+        extensions = tuple(by_name(n) for n in sorted(self.plan.names))
+        n = jax.tree.leaves(inputs)[0].shape[0]
+        if n % self.n_shards:
+            raise ValueError(
+                f"global batch {n} is not divisible by {self.n_shards} "
+                f"shards over mesh axes {self.axes}")
+        if rng is None:
+            if "ggn_mc" in self.plan.sweeps:
+                if cfg.mc_seed is None:
+                    raise ValueError(
+                        "MC extensions need an rng key: pass rng= or set "
+                        "ExtensionConfig(mc_seed=...) for deterministic "
+                        "sweeps")
+                rng = jax.random.PRNGKey(cfg.mc_seed)
+            else:
+                rng = jax.random.PRNGKey(0)  # unused without an MC sweep
+
+        batch = P(tuple(self.axes))
+        red = self.reduce_specs()
+        ext_specs = {name: (batch if red[name] in self._LOCAL_ROWS else P())
+                     for name in self.plan.names}
+
+        def body(p, x, y, key):
+            res = run(model, p, x, y, loss, extensions=extensions, cfg=cfg,
+                      rng=key)
+            return res.loss, res.grads, res.logits, res.ext
+
+        fn = _shard_map(body, mesh=self.mesh,
+                        in_specs=(P(), batch, batch, P()),
+                        out_specs=(P(), P(), batch, ext_specs),
+                        check_rep=False)
+        loss_val, grads, logits, ext = fn(params, inputs, targets, rng)
+        return Results(loss=loss_val, grads=grads, logits=logits, ext=ext)
+
+
 def run(
     model: Module,
     params,
@@ -189,6 +464,12 @@ def run(
     plan = plan_sweeps(extensions, cfg)
     sweeps = plan.sweeps
     first_exts, kron_exts = plan.first_exts, plan.kron_exts
+    # Inside a shard_map body (the ShardedSweepPlan lane): correct the
+    # loss normalization from shard-local to global so every per-sample
+    # quantity below matches its single-device value.
+    axes = cfg.shard_axes
+    if axes:
+        loss = _ShardScaledLoss(loss, axes)
 
     # ---- forward ----------------------------------------------------------
     z, tape = model.forward_tape(params, inputs)
@@ -214,15 +495,25 @@ def run(
     if "second_moment" in names or "variance" in names:
         sum_g2 = _merge_stat_trees(stats, "_sum_grad2")
         n = jax.tree.leaves(inputs)[0].shape[0]
+        n_total = (jnp.float32(n) * _axis_count(axes) if axes
+                   else float(n))
         if "second_moment" in names:
             ext["second_moment"] = jax.tree.map(
-                lambda s: s * float(n), sum_g2
+                lambda s: s * n_total, sum_g2
             )
         if "variance" in names:
-            def var(s, gr):
-                return s * float(n) - gr.astype(jnp.float32) ** 2
+            if axes:
+                # moment-merge reducer: local (Σg, Σg²) pairs combine
+                # across shards via stable pairwise Chan merges; the
+                # result is already global (reducer 'moment_merge').
+                ext["variance"] = _zip_stats(
+                    lambda s, gr: _sharded_variance(s, gr, n, axes),
+                    sum_g2, grads)
+            else:
+                def var(s, gr):
+                    return s * float(n) - gr.astype(jnp.float32) ** 2
 
-            ext["variance"] = _zip_stats(var, sum_g2, grads)
+                ext["variance"] = _zip_stats(var, sum_g2, grads)
     kron_a = _merge_stat_trees(stats, "_kron_a") if kron_exts else None
 
     # ---- GGN sweeps ---------------------------------------------------------
@@ -282,6 +573,8 @@ def run(
         )
         ext["diag_hessian"] = _merge_stat_trees(hstats, "diag_hessian")
 
+    if axes:
+        grads, ext = _reduce_sharded(grads, ext, extensions, axes)
     return Results(loss=loss_val, grads=grads, logits=z, ext=ext)
 
 
@@ -319,3 +612,20 @@ def loss_and_grad(model, params, inputs, targets, loss):
     """Plain training objective — the baseline backward pass."""
     res = run(model, params, inputs, targets, loss, extensions=())
     return res.loss, res.grads
+
+
+def local_loss_and_grad(model, params, inputs, targets, loss, axes):
+    """Inside ``shard_map``: global mean loss + this shard's *unreduced*
+    gradient contribution, already carrying the global 1/M normalization.
+
+    The seam the compressed-DP step needs — it compresses the local
+    contribution (with error feedback) *before* the explicit psum, which
+    the engine's own sharded lane would otherwise have performed
+    internally.  ``psum(local grads) == run(...).grads`` exactly.
+    """
+    sloss = _ShardScaledLoss(loss, axes)
+    z, tape = model.forward_tape(params, inputs)
+    lv = sloss.value(z, targets)
+    g = sloss.grad(z, targets)
+    _, grads, _ = model.backward(params, tape, g, (), ExtensionConfig())
+    return lv, grads

@@ -24,28 +24,43 @@ from typing import Optional
 class Extension:
     name: str
     sweep: str  # 'first' | 'ggn_exact' | 'ggn_mc' | 'kfra' | 'hess'
+    # How shard-local results combine across a data-parallel mesh axis
+    # (the batch-sharded sweep lane, ``SweepPlan.shard``):
+    #   'psum'         sum the per-shard partial reductions (batch-summed
+    #                  statistics: GGN/Hessian diagonals, second moment)
+    #   'concat'       per-sample stats — each shard owns its samples'
+    #                  rows; the sharded out-spec concatenates them
+    #   'gram'         pairwise per-sample stats ([N, N] Gram matrices):
+    #                  each shard computes its row block against the
+    #                  all-gathered factors, rows concatenate
+    #   'kron'         Kronecker factor pairs: A factors are batch *means*
+    #                  (pmean), B factors batch sums (psum)
+    #   'pmean'        batch-averaged statistics (KFRA's Ḡ recursion)
+    #   'moment_merge' mean/variance pairs via the numerically stable
+    #                  pairwise (Chan) moment merge across shards
+    reduce: str = "psum"
 
 
 # --- first-order extensions (paper §2.2, App. A.1) -------------------------
-BatchGrad = Extension("batch_grad", "first")
-BatchL2 = Extension("batch_l2", "first")
+BatchGrad = Extension("batch_grad", "first", reduce="concat")
+BatchL2 = Extension("batch_l2", "first", reduce="concat")
 # beyond-paper (BackPACK-2.x-style): pairwise per-sample gradient dots —
 # gradient-similarity / conflict telemetry, Gram-trick computed
-BatchDot = Extension("batch_dot", "first")
-SecondMoment = Extension("second_moment", "first")
-Variance = Extension("variance", "first")
+BatchDot = Extension("batch_dot", "first", reduce="gram")
+SecondMoment = Extension("second_moment", "first", reduce="psum")
+Variance = Extension("variance", "first", reduce="moment_merge")
 
 # --- second-order extensions (paper §2.3, App. A.2) -------------------------
-DiagGGN = Extension("diag_ggn", "ggn_exact")
-DiagGGNMC = Extension("diag_ggn_mc", "ggn_mc")
-KFLR = Extension("kflr", "ggn_exact")
-KFAC = Extension("kfac", "ggn_mc")
-KFRA = Extension("kfra", "kfra")
-DiagHessian = Extension("diag_hessian", "hess")
+DiagGGN = Extension("diag_ggn", "ggn_exact", reduce="psum")
+DiagGGNMC = Extension("diag_ggn_mc", "ggn_mc", reduce="psum")
+KFLR = Extension("kflr", "ggn_exact", reduce="kron")
+KFAC = Extension("kfac", "ggn_mc", reduce="kron")
+KFRA = Extension("kfra", "kfra", reduce="pmean")
+DiagHessian = Extension("diag_hessian", "hess", reduce="psum")
 # beyond-paper: per-sample GGN trace [N] — curvature-concentration telemetry
 # (which samples dominate the loss curvature); a marginal-cost output of the
 # fused second-order kernel.  Dense-shaped layers (Dense / Conv2d) only.
-GGNTrace = Extension("ggn_trace", "ggn_exact")
+GGNTrace = Extension("ggn_trace", "ggn_exact", reduce="concat")
 
 ALL_EXTENSIONS = (
     BatchGrad,
@@ -70,6 +85,16 @@ def by_name(name: str) -> Extension:
 
 def sweeps_needed(extensions) -> set:
     return {e.sweep for e in extensions}
+
+
+def reduce_spec(extensions) -> dict:
+    """``{extension name: cross-shard reducer}`` for a set of extensions.
+
+    The table the batch-sharded sweep lane acts on — see
+    :class:`Extension` for the reducer vocabulary and
+    ``engine.ShardedSweepPlan`` for the implementation.
+    """
+    return {e.name: e.reduce for e in extensions}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,3 +192,12 @@ class ExtensionConfig:
     # separate kernel or einsum per statistic) — kept as the baseline the
     # fused paths are benchmarked against.
     use_fused: bool = True
+    # Mesh axis names the batch is sharded over, set by the sharded sweep
+    # lane (``SweepPlan.shard``) for the body it runs under
+    # ``jax.shard_map``.  When set, the engine corrects the loss's 1/M
+    # normalization from shard-local to global, layer hooks compute
+    # cross-shard statistics (pairwise dots, KFRA expectations) against
+    # all-gathered factors, and the per-extension ``reduce`` specs are
+    # applied before results leave the shard body.  None = single-device
+    # semantics (the default; never set this by hand outside shard_map).
+    shard_axes: Optional[tuple] = None

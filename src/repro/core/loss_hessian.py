@@ -8,8 +8,11 @@ the paper's nets; tokens for LM heads), each loss exposes
   * ``sqrt_hessian(z, y)``     — exact symmetric factorization ``S`` with
                                  ``S Sᵀ = ∇²_z L`` (paper Eq. 15), shape
                                  ``[C, *z.shape]`` (leading factor axis),
-  * ``sqrt_hessian_mc(rng, z, y, k)`` — Monte-Carlo factor ``S̃`` (Eq. 20),
-                                 shape ``[k, *z.shape]``,
+  * ``sqrt_hessian_mc(rng, z, y, k, sample_offset)`` — Monte-Carlo factor
+                                 ``S̃`` (Eq. 20), shape ``[k, *z.shape]``;
+                                 draws are keyed per *global* sample index
+                                 (``sample_offset + n``) so batch-sharded
+                                 sweeps reproduce single-device draws,
   * ``sqrt_hessian_chunk(z, y, lo, size)`` — a contiguous slice of the exact
                                  factor's leading axis, enabling class-chunked
                                  exact curvature at LM vocabulary scale,
@@ -42,6 +45,17 @@ class CrossEntropyLoss:
         mask = (y >= 0)
         m = jnp.maximum(jnp.sum(mask), 1).astype(jnp.float32)
         return mask, m
+
+    def num_units(self, y):
+        """Raw mask-aware unit count (no ≥1 clamp — a fully padded shard
+        reports 0).
+
+        The sharded sweep lane psums this over the data axes to rescale
+        shard-local factors to the global 1/M normalization — exact even
+        when padding masks are uneven across shards; the lane re-applies
+        the divide-by-zero clamp locally and globally itself.
+        """
+        return jnp.sum(y >= 0).astype(jnp.float32)
 
     def value(self, z, y):
         mask, m = self._mask_and_m(y)
@@ -107,11 +121,25 @@ class CrossEntropyLoss:
         S = S * valid[:, None, None, None] / jnp.sqrt(m)
         return S.reshape((size,) + z.shape).astype(z.dtype)
 
-    def sqrt_hessian_mc(self, rng, z, y, k=1):
+    def sqrt_hessian_mc(self, rng, z, y, k=1, sample_offset=0):
+        """MC factor with *per-sample* PRNG streams.
+
+        Sample ``n`` draws from ``fold_in(rng, sample_offset + n)`` — the
+        draws depend only on a sample's global index, never on the batch
+        shape, so a batch-sharded sweep (each shard passing its global
+        offset) reproduces the single-device factorization bit-for-bit.
+        """
         mask, m = self._mask_and_m(y)
         p = jax.nn.softmax(z.astype(jnp.float32), axis=-1)
-        yhat = jax.random.categorical(rng, z.astype(jnp.float32), axis=-1,
-                                      shape=(k,) + y.shape)
+        keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            rng, sample_offset + jnp.arange(z.shape[0]))
+
+        def draw(key, zn, yn):
+            return jax.random.categorical(key, zn, axis=-1,
+                                          shape=(k,) + yn.shape)
+
+        yhat = jax.vmap(draw)(keys, z.astype(jnp.float32), y)  # [N, k, ...]
+        yhat = jnp.moveaxis(yhat, 1, 0)                        # [k, N, ...]
         onehot = jax.nn.one_hot(yhat, z.shape[-1], dtype=p.dtype)
         S = (p[None] - onehot) * mask[None, ..., None]
         S = S / jnp.sqrt(m * k)
@@ -140,6 +168,10 @@ class MSELoss:
     """0.5‖z − y‖² summed over the last axis, mean over the rest."""
 
     name = "mse"
+
+    def num_units(self, y):
+        """M of the 1/M mean normalization (see CrossEntropyLoss)."""
+        return jnp.float32(max(int(jnp.size(y) // y.shape[-1]), 1))
 
     def value(self, z, y):
         m = max(int(jnp.size(y) // y.shape[-1]), 1)
@@ -172,10 +204,18 @@ class MSELoss:
         S = jnp.broadcast_to(S, (size, N, U, C)) * valid[:, None, None, None]
         return (S / jnp.sqrt(float(m))).reshape((size,) + z.shape).astype(z.dtype)
 
-    def sqrt_hessian_mc(self, rng, z, y, k=1):
+    def sqrt_hessian_mc(self, rng, z, y, k=1, sample_offset=0):
         m = max(int(jnp.size(y) // y.shape[-1]), 1)
-        # E[s sᵀ] = I via Rademacher vectors
-        s = jax.random.rademacher(rng, (k,) + z.shape, dtype=jnp.float32)
+        # E[s sᵀ] = I via Rademacher vectors; per-sample streams keyed by
+        # the global sample index (see CrossEntropyLoss.sqrt_hessian_mc)
+        # keep the draws invariant under batch sharding.
+        keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+            rng, sample_offset + jnp.arange(z.shape[0]))
+        s = jax.vmap(
+            lambda key, zn: jax.random.rademacher(
+                key, (k,) + zn.shape, dtype=jnp.float32)
+        )(keys, z)
+        s = jnp.moveaxis(s, 1, 0)
         return (s / jnp.sqrt(float(m * k))).astype(z.dtype)
 
     def hessian_mean(self, z, y):

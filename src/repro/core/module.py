@@ -115,14 +115,38 @@ def per_sample_sq_sum(A, B, chunk=8, use_kernels=False):
     return out
 
 
-def per_sample_dots(A, B):
+def _pairwise_rows(ps, shard_axes=None):
+    """Gram rows G Gᵀ for per-sample rows ``ps`` [N, ...] → [N, M] float32.
+
+    Single device: M == N (the full pairwise matrix).  Under a
+    batch-sharded sweep (``shard_axes`` set, inside ``shard_map``) each
+    shard computes its *row block* against the all-gathered rows
+    (M == global N); the sharded out-spec concatenates the blocks back
+    into the exact full matrix — pairwise stats are the one statistic a
+    shard cannot finish from local samples alone.
+    """
+    f = _f32(ps).reshape(ps.shape[0], -1)
+    cols = (jax.lax.all_gather(f, shard_axes, axis=0, tiled=True)
+            if shard_axes else f)
+    return f @ cols.T
+
+
+def per_sample_dots(A, B, shard_axes=None):
     """D[n,m] = ⟨g_n, g_m⟩ for g = A_nᵀB_n — pairwise Gram trick.
 
-    A: [N, R, a], B: [N, R, b] → [N, N] float32.  diag(D) == batch_l2.
+    A: [N, R, a], B: [N, R, b] → [N, M] float32; M == N single-device,
+    global N under a sharded sweep (row block vs the all-gathered
+    factors — gathering (A, B) costs activation-sized traffic instead of
+    the [N, a, b] per-sample gradients).  diag of the assembled matrix ==
+    batch_l2.
     """
     A, B = _f32(A), _f32(B)
-    ga = jnp.einsum("nra,msa->nmrs", A, A)
-    gb = jnp.einsum("nrb,msb->nmrs", B, B)
+    Am, Bm = A, B
+    if shard_axes:
+        Am = jax.lax.all_gather(A, shard_axes, axis=0, tiled=True)
+        Bm = jax.lax.all_gather(B, shard_axes, axis=0, tiled=True)
+    ga = jnp.einsum("nra,msa->nmrs", A, Am)
+    gb = jnp.einsum("nrb,msb->nmrs", B, Bm)
     return jnp.sum(ga * gb, axis=(2, 3))
 
 
@@ -161,13 +185,19 @@ def dense_first_order_stats(A, B, exts, cfg: ExtensionConfig, bias: bool):
     mask = first_order_mask(names)
     out = {}
     Af, Bf = _f32(A), _f32(B)
+    axes = getattr(cfg, "shard_axes", None)
     # For R==1 every statistic has a cheaper rank-1 specialization than a
     # fused launch that materializes G[n]=a_n b_nᵀ: l2 is Σa²·Σb²
     # (O(N(a+b))), dot is (AAᵀ)∘(BBᵀ) (O(N²(a+b))), and the moment is the
     # single (A∘A)ᵀ(B∘B) matmul — per_sample_sq_sum routes it to the
     # dedicated sq_matmul kernel below.  Skip the fused kernel entirely.
+    # Under a sharded sweep the pairwise dot needs the *cross-shard* Gram
+    # blocks, which the shard-local fused kernel cannot see — dot drops
+    # out of the launch mask and runs through the gathered Gram einsum
+    # (l2/moment stay fused: they are per-sample/batch-sum local).
     rank1 = A.shape[1] == 1
-    kmask = FusedMask() if rank1 else mask
+    kmask = FusedMask() if rank1 else (
+        dataclasses.replace(mask, dot=False) if axes else mask)
     fused = None
     if cfg.use_kernels and cfg.use_fused and kmask.any():
         from repro.kernels import ops as kops
@@ -200,10 +230,10 @@ def dense_first_order_stats(A, B, exts, cfg: ExtensionConfig, bias: bool):
         # kernel ever existed, so that IS the per-extension baseline (and
         # for R==1 it reduces to the cheap (AAᵀ)∘(BBᵀ) form).
         dw = (fused["dot"] if fused is not None and kmask.dot
-              else per_sample_dots(A, B))
+              else per_sample_dots(A, B, shard_axes=axes))
         if bias:
             bsum = jnp.sum(Bf, axis=1)
-            out["batch_dot"] = {"w": dw, "b": bsum @ bsum.T}
+            out["batch_dot"] = {"w": dw, "b": _pairwise_rows(bsum, axes)}
         else:
             out["batch_dot"] = {"w": dw}
     if "kfac" in names or "kflr" in names:
@@ -350,8 +380,9 @@ class Module:
                 lambda a: jnp.sum(_f32(a).reshape(a.shape[0], -1) ** 2, -1), pg
             )
         if "batch_dot" in names:
+            axes = getattr(cfg, "shard_axes", None)
             out["batch_dot"] = jax.tree.map(
-                lambda a: (f := _f32(a).reshape(a.shape[0], -1)) @ f.T, pg
+                lambda a: _pairwise_rows(a, axes), pg
             )
         return out
 
@@ -551,7 +582,8 @@ class Embedding(Module):
             if "batch_l2" in names:
                 stats["batch_l2"] = {"w": jnp.sum(pg * pg, axis=(1, 2))}
             if "batch_dot" in names:
-                stats["batch_dot"] = {"w": jnp.einsum("nvd,mvd->nm", pg, pg)}
+                stats["batch_dot"] = {
+                    "w": _pairwise_rows(pg, getattr(cfg, "shard_axes", None))}
         if "kfac" in names or "kflr" in names:
             counts = jnp.zeros((self.vocab,), jnp.float32).at[tok.reshape(-1)].add(1.0)
             stats["_kron_a"] = {"w": counts / float(tok.size)}  # diagonal A
@@ -630,7 +662,8 @@ class RMSNorm(Module):
         if "batch_l2" in names:
             stats["batch_l2"] = {"g": jnp.sum(per_sample ** 2, -1)}
         if "batch_dot" in names:
-            stats["batch_dot"] = {"g": per_sample @ per_sample.T}
+            stats["batch_dot"] = {"g": _pairwise_rows(
+                per_sample, getattr(cfg, "shard_axes", None))}
         return g_in, grads, stats
 
     def jac_t_mat(self, params, tape, M):
@@ -693,7 +726,8 @@ class GroupRMSNorm(RMSNorm):
         if "batch_l2" in names:
             stats["batch_l2"] = {"g": jnp.sum(per_sample ** 2, -1)}
         if "batch_dot" in names:
-            stats["batch_dot"] = {"g": per_sample @ per_sample.T}
+            stats["batch_dot"] = {"g": _pairwise_rows(
+                per_sample, getattr(cfg, "shard_axes", None))}
         return g_in, grads, stats
 
     def jac_t_mat(self, params, tape, M):
@@ -749,7 +783,9 @@ class LayerNorm(Module):
         if "batch_l2" in names:
             stats["batch_l2"] = {"g": jnp.sum(per_g ** 2, -1), "b": jnp.sum(per_b ** 2, -1)}
         if "batch_dot" in names:
-            stats["batch_dot"] = {"g": per_g @ per_g.T, "b": per_b @ per_b.T}
+            axes = getattr(cfg, "shard_axes", None)
+            stats["batch_dot"] = {"g": _pairwise_rows(per_g, axes),
+                                  "b": _pairwise_rows(per_b, axes)}
         return gx, gp, stats
 
     def curv_backward(self, params, tape, S, exts, cfg, ext_prefix):
@@ -822,6 +858,13 @@ class Activation(Module):
         # Ḡ_in = Ḡ ∘ E_n[f'_n f'_nᵀ]   (diagonal per-sample Jacobians)
         n, r, h = d1.shape
         outer = jnp.einsum("nri,nrj->ij", d1, d1) / float(n * r)
+        # The Ḡ recursion needs the expectation over the *global* batch at
+        # every step — a local mean would compound shard bias layer by
+        # layer, so under a sharded sweep the expectation is pmean'd here,
+        # in-line, not post-hoc.
+        axes = getattr(cfg, "shard_axes", None)
+        if axes:
+            outer = jax.lax.pmean(outer, axes)
         return Gbar * outer, {}
 
     def hess_backward(self, params, tape, g, factors, exts, cfg):

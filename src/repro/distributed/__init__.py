@@ -4,4 +4,8 @@ from repro.distributed.compress import (
     init_error_feedback,
 )
 from repro.distributed.dp_step import init_ef_sharded, make_compressed_dp_step
-from repro.distributed.kfac_dist import compress_factors, shard_factor_inverses
+from repro.distributed.kfac_dist import (
+    compress_factors,
+    make_dist_kfac_step,
+    shard_factor_inverses,
+)

@@ -3,11 +3,18 @@ error feedback.
 
 The implicit-SPMD path (jit + sharded batch) reduces gradients in f32
 inside XLA's backward — there is no seam to compress at.  This step makes
-the DP reduction *explicit*: per-shard gradients are computed locally,
-compressed to bf16 with a per-shard error-feedback residual, psum'd over
-the data axes, and decompressed — halving the dominant DP collective's
-bytes while the accumulated update stays unbiased (error feedback,
-Karimireddy et al. 2019).
+the DP reduction *explicit*, and it is built on the engine's sharded-sweep
+machinery (``engine.local_loss_and_grad``): the shard body runs the
+scale-corrected local backward — each shard's gradient contribution
+already carries the *global* 1/M normalization, exactly as inside
+``SweepPlan.shard``'s lane — so the compressed psum is the only
+distributed arithmetic left here.  Per-shard gradients are compressed to
+bf16 with a per-shard error-feedback residual, psum'd over the data axes,
+and decompressed — halving the dominant DP collective's bytes while the
+accumulated update stays unbiased (error feedback, Karimireddy et al.
+2019).  Riding the engine seam also fixes the mean-of-local-means loss:
+``local_loss_and_grad`` psums the mask-aware unit counts, so the reported
+loss is the exact global mean even with uneven padding across shards.
 
 Scope: pure-DP over ('data',) / ('pod','data'); TP-sharded params use the
 implicit path (their activation collectives are latency-bound, not
@@ -21,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core import engine as eng
 from repro.distributed.compress import compress_with_ef
 from repro.optim.optimizers import apply_updates
 
@@ -31,25 +39,20 @@ def init_ef_sharded(params, n_shards):
 
 
 def make_compressed_dp_step(model, loss, opt, mesh, data_axes=("data",)):
-    n_shards = 1
-    for ax in data_axes:
-        n_shards *= mesh.shape[ax]
     batch_spec = jax.tree.map(lambda _: P(data_axes), {"inputs": 0, "labels": 0})
 
     def shard_body(params, ef, batch):
-        def loss_fn(p):
-            z = model.apply(p, batch["inputs"])
-            return loss.value(z, batch["labels"])
-
-        lv, g = jax.value_and_grad(loss_fn)(params)
+        # Scale-corrected local sweep (the sharded lane's seam): lv is the
+        # exact global mean loss, g the shard's unreduced contribution to
+        # the global gradient.
+        lv, g = eng.local_loss_and_grad(
+            model, params, batch["inputs"], batch["labels"], loss, data_axes)
         ef_local = jax.tree.map(lambda e: e[0], ef)
         comp, new_ef = compress_with_ef(g, ef_local)
-        summed = jax.tree.map(lambda c: jax.lax.psum(c, data_axes), comp)
-        g_avg = jax.tree.map(
-            lambda s: s.astype(jnp.float32) / n_shards, summed)
-        lv = jax.lax.pmean(lv, data_axes)
+        g_sum = jax.tree.map(
+            lambda c: jax.lax.psum(c, data_axes).astype(jnp.float32), comp)
         new_ef = jax.tree.map(lambda e: e[None], new_ef)
-        return lv, g_avg, new_ef
+        return lv, g_sum, new_ef
 
     smapped = shard_map(
         shard_body, mesh=mesh,
@@ -59,8 +62,8 @@ def make_compressed_dp_step(model, loss, opt, mesh, data_axes=("data",)):
     )
 
     def step(params, opt_state, ef, batch):
-        lv, g_avg, new_ef = smapped(params, ef, batch)
-        ups, opt_state = opt.update(g_avg, opt_state, params)
+        lv, g_sum, new_ef = smapped(params, ef, batch)
+        ups, opt_state = opt.update(g_sum, opt_state, params)
         params = apply_updates(params, ups)
         return params, opt_state, new_ef, lv
 

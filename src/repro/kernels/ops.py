@@ -174,13 +174,33 @@ def _auto_block(dim, cap):
     return min(cap, -(-(-(-dim // n_tiles)) // 8) * 8)
 
 
+def _auto_class_chunk(S2, ba, bb, *, mxu_intermediate, kron_view=False):
+    """VMEM-budgeted class chunk, sized from the **local** batch.
+
+    The per-class float32 working set of one grid step: the S tile, plus
+    the [C'·N, ba, bb] MXU contraction intermediate when requested, plus
+    the full-width second S view for the Kronecker output.  The estimate
+    scales with the batch the kernel actually sees — under the
+    batch-sharded sweep lane (``SweepPlan.shard``) that is the
+    *shard-local* N, so smaller shards automatically take larger class
+    chunks (fewer grid steps) inside the same ~4 MiB budget.
+    """
+    n2, r2 = S2.shape[1], S2.shape[2]
+    per_c = n2 * r2 * bb
+    if mxu_intermediate:
+        per_c += n2 * ba * bb
+    if kron_view:
+        per_c += n2 * r2 * S2.shape[3]
+    return max(1, (1 << 20) // max(per_c, 1))
+
+
 def _pad_factor_pair(A, S, block_a, block_b, interpret):
     """Shared block-sizing + padding policy for the ``(A, S)`` kernels
     (``fused_second_order``, ``predictive_var``): A [N, R, a] and
     S [C, N, R, b] padded to (auto- or caller-chosen) feature blocks and
-    sublane multiples.  Returns ``(A2, S2, ba, bb)``; the per-kernel auto
-    ``class_chunk`` budgets stay with their wrappers (their VMEM working
-    sets genuinely differ)."""
+    sublane multiples.  Returns ``(A2, S2, ba, bb)``; auto ``class_chunk``
+    budgets live in :func:`_auto_class_chunk` (per-kernel flags select
+    which working-set terms apply)."""
     a, b = A.shape[-1], S.shape[-1]
     cap = 512 if interpret else 128
     ba = (_clamp_block(block_a, a) if block_a is not None
@@ -302,16 +322,9 @@ def _fused_second_order(A, S, *, want_diag=True, want_kron=False,
     a = A.shape[-1]
     A2, S2, ba, bb = _pad_factor_pair(A, S, block_a, block_b, interpret)
     if class_chunk is None:
-        # Per-class float32 working set of one grid step: the S tile,
-        # plus the [C'·N, ba, bb] MXU intermediate when diag/trace need
-        # the contraction, plus the full-width second S view for kron.
-        n2, r2 = S2.shape[1], S2.shape[2]
-        per_c = n2 * r2 * bb
-        if want_diag or want_trace:
-            per_c += n2 * ba * bb
-        if want_kron:
-            per_c += n2 * r2 * S2.shape[3]
-        class_chunk = max(1, (1 << 20) // max(per_c, 1))
+        class_chunk = _auto_class_chunk(
+            S2, ba, bb, mxu_intermediate=want_diag or want_trace,
+            kron_view=want_kron)
     cc = max(1, min(class_chunk, c))
     S2 = _pad_to(S2, 0, cc)
     out = fused_second_order_pallas(
@@ -349,11 +362,7 @@ def _predictive_var(A, S, *maybe_sigma, want_sigma=False, block_a=None,
         (Sigma,) = maybe_sigma
         Sigma2 = _pad_to(_pad_to(Sigma, 1, bb), 0, ba)
     if class_chunk is None:
-        # Per-class float32 working set of one grid step: the S tile plus
-        # the [C'·N, ba, bb] MXU contraction intermediate.
-        n2, r2 = S2.shape[1], S2.shape[2]
-        per_c = n2 * r2 * bb + n2 * ba * bb
-        class_chunk = max(1, (1 << 20) // max(per_c, 1))
+        class_chunk = _auto_class_chunk(S2, ba, bb, mxu_intermediate=True)
     cc = max(1, min(class_chunk, c))
     S2 = _pad_to(S2, 0, cc)
     out = predictive_var_pallas(

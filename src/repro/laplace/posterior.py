@@ -77,6 +77,22 @@ def _likelihood_of(loss) -> str:
     return "regression" if isinstance(loss, MSELoss) else "classification"
 
 
+def _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
+               mesh, shard_axes):
+    """One engine sweep — single-device, or batch-sharded over ``mesh``.
+
+    With a mesh the sweep routes through ``SweepPlan.shard`` (the fused
+    kernels run per shard, curvature psums per the extensions' reduce
+    specs), so the same fit call serves 1..N devices and the returned
+    curvature trees are placement-identical to the single-device ones.
+    """
+    if mesh is None:
+        return eng.run(model, params, x, y, loss, extensions=extensions,
+                       cfg=cfg, rng=rng)
+    plan = eng.plan_sweeps(extensions, cfg).shard(mesh, shard_axes)
+    return plan.run(model, params, x, y, loss, cfg=cfg, rng=rng)
+
+
 def _is_kron_block(node) -> bool:
     return (isinstance(node, dict) and "B" in node
             and set(node) <= {"A", "B", "A_diag"})
@@ -206,12 +222,12 @@ class DiagLaplace(_EvidenceMixin):
     @classmethod
     def fit(cls, model, params, x, y, loss, *, mc: bool = False,
             prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
-            rng=None, extensions=None):
+            rng=None, extensions=None, mesh=None, shard_axes=("data",)):
         cfg, extensions, rng = _fit_args(
             cfg, extensions, rng, mc, default=(DiagGGNMC,) if mc else (DiagGGN,))
         _require_structure("diag", extensions, cfg)
-        res = eng.run(model, params, x, y, loss, extensions=extensions,
-                      cfg=cfg, rng=rng)
+        res = _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
+                         mesh, shard_axes)
         name = "diag_ggn_mc" if "diag_ggn_mc" in res.ext else "diag_ggn"
         curv = res.ext[name]
         try:
@@ -298,12 +314,12 @@ class KronLaplace(_EvidenceMixin):
     @classmethod
     def fit(cls, model, params, x, y, loss, *, mc: bool = False,
             prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
-            rng=None, extensions=None):
+            rng=None, extensions=None, mesh=None, shard_axes=("data",)):
         cfg, extensions, rng = _fit_args(
             cfg, extensions, rng, mc, default=(KFAC,) if mc else (KFLR,))
         _require_structure("kron", extensions, cfg)
-        res = eng.run(model, params, x, y, loss, extensions=extensions,
-                      cfg=cfg, rng=rng)
+        res = _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
+                         mesh, shard_axes)
         name = "kfac" if "kfac" in res.ext else "kflr"
         kron_tree = res.ext[name]
         # Validate coverage (and surface the actionable message now, not at

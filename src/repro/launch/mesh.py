@@ -34,6 +34,17 @@ def make_mesh(shape, axes):
     return _mesh(tuple(shape), tuple(axes))
 
 
+def make_data_mesh(n_devices=None):
+    """1-D ('data',) mesh over ``n_devices`` (default: every local device).
+
+    The mesh the batch-sharded sweep lane (``SweepPlan.shard``) and the
+    multi-device CI lane run on — pure DP, no model axis.
+    """
+    if n_devices is None:
+        n_devices = jax.device_count()
+    return _mesh((n_devices,), ("data",))
+
+
 # v5e-class hardware constants for the roofline (per chip)
 PEAK_FLOPS_BF16 = 197e12     # FLOP/s
 HBM_BW = 819e9               # B/s

@@ -31,6 +31,10 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="full-size config (pod-scale; not for CPU)")
     ap.add_argument("--track-variance", action="store_true")
+    ap.add_argument("--shard-sweep", action="store_true",
+                    help="run extension sweeps batch-sharded over all "
+                         "local devices (SweepPlan.shard lane; batch must "
+                         "divide the device count)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -56,9 +60,17 @@ def main():
         extensions = tuple(extensions) + (Variance,)
         track = ("variance",)
 
+    mesh = None
+    if args.shard_sweep and extensions:
+        from repro.launch.mesh import make_data_mesh
+
+        mesh = make_data_mesh()
+        print(f"[shard-sweep] data mesh over {mesh.shape['data']} device(s)")
+
     loop = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt, log_every=10)
     _, _, hist, wd = fit(model, cfg, shape, opt, loop, extensions=extensions,
-                         ext_cfg=ext_cfg, resume=args.resume, track=track)
+                         ext_cfg=ext_cfg, resume=args.resume, track=track,
+                         mesh=mesh)
     print(f"final loss {hist[-1]['loss']:.4f} "
           f"(stragglers flagged: {len(wd.straggler_steps)})")
 

@@ -5,4 +5,5 @@ from repro.sharding.rules import (
     input_shardings,
     partition_specs,
     rules_for,
+    sweep_shard_axes,
 )

@@ -57,6 +57,16 @@ def batch_axes(multi_pod: bool):
     return ("pod", "data") if multi_pod else ("data",)
 
 
+def sweep_shard_axes(mesh):
+    """Mesh axes the batch-sharded sweep lane (``SweepPlan.shard``) splits
+    over — the canonical batch axes from this rules table that actually
+    exist in ``mesh``.  One table drives both the implicit-SPMD input
+    shardings and the explicit sharded-sweep lane, so the two paths can
+    never disagree about which axes carry data parallelism."""
+    return tuple(ax for ax in batch_axes("pod" in mesh.axis_names)
+                 if ax in mesh.axis_names)
+
+
 def _axis_size(mesh, name):
     if name is None:
         return 1

@@ -43,8 +43,12 @@ class LoopConfig:
 def fit(model, cfg, shape, opt, loop: LoopConfig,
         extensions: Sequence = (), ext_cfg: Optional[ExtensionConfig] = None,
         injector: Optional[FailureInjector] = None, resume: bool = False,
-        log_fn: Callable = print, track: Sequence[str] = ()):
-    """Train `model` (built from arch config `cfg`) on synthetic data."""
+        log_fn: Callable = print, track: Sequence[str] = (),
+        mesh=None, shard_axes=("data",)):
+    """Train `model` (built from arch config `cfg`) on synthetic data.
+
+    With ``mesh`` the extended step runs the batch-sharded sweep lane
+    (``SweepPlan.shard``) — same numbers, N devices."""
     loss = CrossEntropyLoss()
     params = model.init(jax.random.PRNGKey(loop.seed))
     opt_state = opt.init(params)
@@ -59,7 +63,8 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
 
     if extensions:
         step_fn = jax.jit(make_extended_train_step(
-            model, loss, opt, extensions, ext_cfg, track=track))
+            model, loss, opt, extensions, ext_cfg, track=track,
+            mesh=mesh, shard_axes=shard_axes))
     else:
         step_fn = jax.jit(make_train_step(model, loss, opt))
 

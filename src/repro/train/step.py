@@ -79,19 +79,35 @@ def make_train_step(model, loss, opt, *, microbatch: int = 1,
 
 def make_extended_train_step(model, loss, opt, extensions,
                              cfg: Optional[ExtensionConfig] = None,
-                             track: Sequence[str] = ()):
+                             track: Sequence[str] = (),
+                             mesh=None, shard_axes=("data",)):
     """Engine-backed step: gradient + extensions in one generalized
     backprop; curvature goes to the optimizer (Eq. 7), tracked scalars
-    (e.g. mean variance → gradient-noise telemetry) go to metrics."""
+    (e.g. mean variance → gradient-noise telemetry) go to metrics.
+
+    With ``mesh`` the sweep routes through the batch-sharded lane
+    (``SweepPlan.shard`` over ``shard_axes``) — fused kernels on each
+    device's batch shard, statistic-aware cross-shard reduction — and the
+    step is numerically identical on 1 or N devices.
+    """
     cfg = cfg or ExtensionConfig()
     ext_names = {e.name for e in extensions}
     curv_name = next(
         (n for n in ("kfac", "kflr", "diag_ggn_mc", "diag_ggn", "kfra",
                      "diag_hessian") if n in ext_names), None)
+    splan = None
+    if mesh is not None:
+        splan = eng.plan_sweeps(extensions, cfg).shard(mesh, shard_axes)
+
+    def sweep(params, batch, rng):
+        if splan is not None:
+            return splan.run(model, params, batch["inputs"],
+                             batch["labels"], loss, cfg=cfg, rng=rng)
+        return eng.run(model, params, batch["inputs"], batch["labels"], loss,
+                       extensions=extensions, cfg=cfg, rng=rng)
 
     def step(params, opt_state, batch, step_idx, rng):
-        res = eng.run(model, params, batch["inputs"], batch["labels"], loss,
-                      extensions=extensions, cfg=cfg, rng=rng)
+        res = sweep(params, batch, rng)
         kw = {}
         if curv_name is not None:
             kw["curv"] = res.ext[curv_name]

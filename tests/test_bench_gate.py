@@ -1,0 +1,70 @@
+"""The bench-regression gate's comparison logic (benchmarks/check_regression).
+
+The gate itself runs in the bench-smoke CI job; these tests pin its
+semantics — fused-segment selection, the 1.5× threshold, and the
+missing-lane failure mode — without timing anything.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import check, load_rows, main  # noqa: E402
+
+BASE = {
+    "fused_first_order/N8/fused/all3": 100.0,
+    "fused_first_order/N8/per_ext/all3": 900.0,   # baseline lane: not gated
+    "fused_second_order/baseline/diag": 500.0,    # module prefix: not gated
+    "laplace/predvar/fused": 200.0,
+    "kernels/batch_l2/pallas_interpret": 50.0,    # not a fused lane
+}
+PAT = "/fused(/|$)"
+
+
+def test_within_threshold_passes():
+    cur = dict(BASE, **{"fused_first_order/N8/fused/all3": 140.0})
+    failures, checked = check(cur, BASE, 1.5, PAT)
+    assert failures == []
+    assert sorted(checked) == ["fused_first_order/N8/fused/all3",
+                               "laplace/predvar/fused"]
+
+
+def test_slowdown_fails_only_gated_lanes():
+    cur = dict(BASE, **{
+        "fused_first_order/N8/fused/all3": 160.0,       # 1.6x: fail
+        "fused_first_order/N8/per_ext/all3": 9000.0,    # 10x but ungated
+        "kernels/batch_l2/pallas_interpret": 5000.0,    # ungated
+    })
+    failures, _ = check(cur, BASE, 1.5, PAT)
+    assert failures == ["fused_first_order/N8/fused/all3"]
+
+
+def test_missing_gated_lane_fails():
+    cur = {k: v for k, v in BASE.items() if k != "laplace/predvar/fused"}
+    failures, _ = check(cur, BASE, 1.5, PAT)
+    assert failures == ["laplace/predvar/fused"]
+
+
+def test_load_rows_accepts_both_artifact_forms(tmp_path):
+    rows = [{"name": "a/fused", "us_per_call": 1.5, "derived": ""}]
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps(rows))
+    wrapped = tmp_path / "wrapped.json"
+    wrapped.write_text(json.dumps({"quick": True, "rows": rows}))
+    assert load_rows(bare) == {"a/fused": 1.5}
+    assert load_rows(wrapped) == {"a/fused": 1.5}
+
+
+def test_main_exit_codes(tmp_path):
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(
+        [{"name": "x/fused", "us_per_call": 100.0}]))
+    cur.write_text(json.dumps([{"name": "x/fused", "us_per_call": 120.0}]))
+    assert main([str(cur), str(base)]) == 0
+    cur.write_text(json.dumps([{"name": "x/fused", "us_per_call": 200.0}]))
+    assert main([str(cur), str(base)]) == 1
+    # baseline with no gated lanes at all: configuration error, fail
+    base.write_text(json.dumps([{"name": "x/naive", "us_per_call": 1.0}]))
+    assert main([str(cur), str(base)]) == 1

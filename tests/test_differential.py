@@ -33,8 +33,10 @@ from repro.core import (
     ExtensionConfig,
     Sequential,
     by_name,
+    plan_sweeps,
     run,
 )
+from repro.launch.mesh import make_data_mesh
 
 N, D, H, C = 5, 6, 7, 4
 LOSS = CrossEntropyLoss()
@@ -97,3 +99,51 @@ def test_all_configs_agree(names, setup):
                 np.testing.assert_allclose(
                     np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5,
                     err_msg=f"{name} under {cfg}")
+
+
+# ---------------------------------------------------------------------------
+# batch-sharded lane: the same invariant across devices
+# ---------------------------------------------------------------------------
+
+NS = 16  # divisible by any power-of-two device count the CI lanes use
+
+
+@pytest.fixture(scope="module")
+def sharded_setup(setup):
+    model, params, _, _ = setup
+    x = jax.random.normal(jax.random.PRNGKey(3), (NS, D))
+    y = jax.random.randint(jax.random.PRNGKey(4), (NS,), 0, C)
+    return model, params, x, y, make_data_mesh()
+
+
+@pytest.mark.parametrize("names", SUBSETS, ids=["+".join(s) for s in SUBSETS])
+def test_sharded_sweep_matches_single_device(names, sharded_setup):
+    """The property behind the per-extension reduce specs: for every
+    extension subset and every ``use_kernels × use_fused`` configuration,
+    the batch-sharded sweep (psum / kron / pmean / moment-merge reducers,
+    concatenated per-sample rows, gathered Gram blocks) is allclose to the
+    single-device sweep.  The mesh spans every device the process owns —
+    1 in the default lanes (the lane still runs end to end), 8 in the
+    ``tests-multidevice`` CI lane."""
+    model, params, x, y, mesh = sharded_setup
+    exts = tuple(by_name(n) for n in names)
+    rng = jax.random.PRNGKey(42)
+    for cfg in CONFIGS:
+        ref = run(model, params, x, y, LOSS, extensions=exts, cfg=cfg,
+                  rng=rng)
+        res = plan_sweeps(exts, cfg).shard(mesh, "data").run(
+            model, params, x, y, LOSS, cfg=cfg, rng=rng)
+        np.testing.assert_allclose(np.asarray(res.loss),
+                                   np.asarray(ref.loss), rtol=1e-6)
+        for a, b in zip(_leaves(res.grads), _leaves(ref.grads)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        assert set(res.ext) == set(ref.ext), cfg
+        for name in ref.ext:
+            ra, rb = _leaves(ref.ext[name]), _leaves(res.ext[name])
+            assert len(ra) == len(rb) and ra, (name, cfg)
+            for a, b in zip(ra, rb):
+                assert a.shape == b.shape, (name, cfg)
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5,
+                    err_msg=f"sharded {name} under {cfg}")
