@@ -1,0 +1,114 @@
+"""Streaming accumulated sweep vs the monolithic sweep (ISSUE 5 tentpole).
+
+The accumulated lane's contract is *bounded memory at matched math*: the
+identical fused-kernel sweep runs per microbatch slice and the reduce
+specs fold sequentially, so the only cost question is the streaming
+overhead — per-slice kernel launches, the scan carry, the remainder
+trace — against the one-shot monolithic sweep at the same effective
+batch.  Lanes per shape (N, D, H, C), mixed first+second-order workload
+{batch_l2, variance, diag_ggn, kflr} with fused kernels on:
+
+  accumulate/fused/mono         monolithic fused sweep (the 1× baseline)
+  accumulate/fused/k4           plan.accumulate(4) — same numbers
+  accumulate/fused/k8           plan.accumulate(8)
+  accumulate/fused/bigbatch_k8  a batch several× the monolithic lanes',
+                                runnable at microbatch-sized peak
+                                activation/factor memory — the lane that
+                                exercises batches past the device-memory
+                                heuristics the other suites stop at
+  accumulate/baseline/jnp_k4    accumulate(4) on the pure-jnp path (the
+                                per-extension baseline; ungated)
+
+``derived`` carries the ratio vs accumulate/fused/mono (and for the big
+batch, its microbatch row count).  The fused lanes are gated by
+``benchmarks/check_regression.py`` against ``BENCH_smoke_accumulate.json``
+like every other fused claim.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, quick_mode, time_group
+from repro.core import (
+    Activation,
+    CrossEntropyLoss,
+    Dense,
+    ExtensionConfig,
+    Sequential,
+    by_name,
+    plan_sweeps,
+    run,
+)
+
+# (N, D, H, C): batch, input dim, hidden, classes
+SHAPES = [(256, 64, 128, 32)]
+QUICK_SHAPES = [(32, 16, 32, 8)]
+BIG_FACTOR = 4  # bigbatch lane: N * BIG_FACTOR rows, still k=8 slices
+
+EXT_NAMES = ("batch_l2", "variance", "diag_ggn", "kflr")
+
+
+def _make(n, d, h, c, seed=0):
+    model = Sequential([Dense(d, h), Activation("sigmoid"), Dense(h, c)])
+    params = model.init(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, d))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 2), (n,), 0, c)
+    return model, params, x, y
+
+
+def _sweep_fn(model, plan_or_none, exts, cfg, loss):
+    if plan_or_none is None:
+        def mono(params, x, y):
+            res = run(model, params, x, y, loss, extensions=exts, cfg=cfg)
+            return res.loss, res.ext["diag_ggn"]
+
+        return jax.jit(mono)
+
+    def acc(params, x, y):
+        res = plan_or_none.run(model, params, x, y, loss, cfg=cfg)
+        return res.loss, res.ext["diag_ggn"]
+
+    return jax.jit(acc)
+
+
+def main():
+    shapes = QUICK_SHAPES if quick_mode() else SHAPES
+    loss = CrossEntropyLoss()
+    exts = tuple(by_name(nm) for nm in EXT_NAMES)
+    for (n, d, h, c) in shapes:
+        model, params, x, y = _make(n, d, h, c)
+        fused = ExtensionConfig(use_kernels=True)
+        naive = ExtensionConfig(use_kernels=False)
+        plan_f = plan_sweeps(exts, fused)
+        plan_n = plan_sweeps(exts, naive)
+        tag = f"N{n}_d{d}_h{h}_c{c}"
+
+        lanes = {
+            "accumulate/fused/mono":
+                _sweep_fn(model, None, exts, fused, loss),
+            "accumulate/fused/k4":
+                _sweep_fn(model, plan_f.accumulate(4), exts, fused, loss),
+            "accumulate/fused/k8":
+                _sweep_fn(model, plan_f.accumulate(8), exts, fused, loss),
+            "accumulate/baseline/jnp_k4":
+                _sweep_fn(model, plan_n.accumulate(4), exts, naive, loss),
+        }
+        thunks = {name: (lambda f=f: f(params, x, y))
+                  for name, f in lanes.items()}
+        times = time_group(thunks)
+        base = times["accumulate/fused/mono"]
+        for name, us in times.items():
+            emit(f"{name}/{tag}", us, f"x{us / base:.2f}_vs_mono")
+
+        # The beyond-memory lane: BIG_FACTOR× the batch, streamed in k=8
+        # slices — peak per-slice working set stays at bigN/8 rows.
+        big_n = n * BIG_FACTOR
+        _, _, xb, yb = _make(big_n, d, h, c, seed=7)
+        big = _sweep_fn(model, plan_f.accumulate(8), exts, fused, loss)
+        t = time_group({"big": lambda: big(params, xb, yb)})["big"]
+        emit(f"accumulate/fused/bigbatch_k8/N{big_n}_d{d}_h{h}_c{c}", t,
+             f"microbatch_rows={-(-big_n // 8)}")
+
+
+if __name__ == "__main__":
+    main()

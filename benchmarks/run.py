@@ -14,6 +14,8 @@ smaller shapes where a benchmark defines them (currently ``fused``).
                                                           ISSUE 2 tentpole)
   kernels   Pallas kernels (interpret)                   (deliverable c)
   fused     fused first-order kernel vs per-extension    (ISSUE 1 tentpole)
+  accumulate  streaming accumulated sweep vs monolithic,
+            incl. a beyond-memory-scale batch lane       (ISSUE 5 tentpole)
   laplace   posterior fit + fused predictive-variance
             kernel vs naive Jacobian baseline; also
             refreshes BENCH_laplace.json (repo root, or
@@ -55,6 +57,7 @@ def main() -> None:
     # Import after --quick is in the environment (modules read it lazily,
     # but keep the ordering obvious).
     from benchmarks import (
+        bench_accumulate,
         bench_c_scaling,
         bench_fused_first_order,
         bench_hessian_diag,
@@ -74,6 +77,7 @@ def main() -> None:
         "fig9": bench_hessian_diag.main,
         "kernels": bench_kernels.main,
         "fused": bench_fused_first_order.main,
+        "accumulate": bench_accumulate.main,
         "laplace": bench_laplace.main,
         "roofline": bench_roofline.main,
     }

@@ -55,10 +55,12 @@ from .module import (
     per_sample_sq_sum,
 )
 from .engine import (
+    AccumulatedSweepPlan,
     Results,
     ShardedSweepPlan,
     SweepPlan,
     loss_and_grad,
+    plan_for_batch,
     plan_sweeps,
     run,
 )

@@ -23,6 +23,16 @@ Sweep plan (decided statically from the requested extensions):
 
 The whole engine is pure-functional and jit/pjit-compatible: the caller may
 wrap ``run`` in ``jax.jit`` with sharded inputs.
+
+Scale-out lanes (both driven by the extensions' declared ``reduce`` specs):
+
+  ``SweepPlan.shard(mesh, axes)``      split the batch over devices
+                                       (``shard_map``; cross-shard
+                                       collectives per reduce spec)
+  ``SweepPlan.accumulate(k)``          stream the batch over k sequential
+                                       microbatches (``lax.scan``; the same
+                                       reduce specs as running accumulators)
+  ``plan.shard(mesh).accumulate(k)``   both: the shard × accumulate grid
 """
 from __future__ import annotations
 
@@ -131,10 +141,59 @@ class SweepPlan:
             axes = (axes,)
         return ShardedSweepPlan(plan=self, mesh=mesh, axes=tuple(axes))
 
+    def accumulate(self, num_microbatches: int) -> "AccumulatedSweepPlan":
+        """Bind this plan to a microbatch schedule: the streaming lane.
+
+        The returned :class:`AccumulatedSweepPlan` runs the identical
+        sweep once per microbatch slice under a ``lax.scan`` driver,
+        folding results through each extension's ``reduce`` spec
+        reinterpreted as a *sequential* accumulator — effective batches
+        far beyond device memory, matching the monolithic sweep.
+        Composes with sharding: ``plan.shard(mesh).accumulate(k)`` is the
+        shard × accumulate grid.
+
+        Parameters
+        ----------
+        num_microbatches : int
+            Number of sequential slices the batch is split into (each of
+            ``ceil(N / num_microbatches)`` samples; the final slice may
+            be smaller).
+        """
+        return AccumulatedSweepPlan(plan=self,
+                                    num_microbatches=int(num_microbatches))
+
+    def run(self, model, params, inputs, targets, loss,
+            cfg: Optional[ExtensionConfig] = None,
+            rng: Optional[jax.Array] = None) -> Results:
+        """Run the monolithic sweep for this plan's extensions — the
+        plan-object counterpart of :func:`run`, giving all three lanes
+        (monolithic / sharded / accumulated) one calling convention."""
+        extensions = tuple(by_name(n) for n in sorted(self.names))
+        return run(model, params, inputs, targets, loss,
+                   extensions=extensions, cfg=cfg, rng=rng)
+
 
 def plan_sweeps(extensions: Sequence[Extension],
                 cfg: Optional[ExtensionConfig] = None) -> SweepPlan:
-    """Build the static sweep plan for a set of requested extensions."""
+    """Build the static sweep plan for a set of requested extensions.
+
+    Parameters
+    ----------
+    extensions : sequence of Extension
+        The quantities to extract (``repro.core.BatchGrad`` etc.).
+    cfg : ExtensionConfig, optional
+        Only ``use_kernels`` / ``use_fused`` are consulted (they decide
+        ``fused_active``); sweep structure depends on the extensions
+        alone.
+
+    Returns
+    -------
+    SweepPlan
+        The static schedule: which backward sweeps run, which fused
+        kernel outputs they request, and the scale-out entry points
+        (:meth:`SweepPlan.shard`, :meth:`SweepPlan.accumulate`).
+        ``plan.describe()`` renders it for inspection.
+    """
     cfg = cfg or ExtensionConfig()
     first_exts = tuple(e for e in extensions if e.sweep == "first")
     return SweepPlan(
@@ -147,6 +206,36 @@ def plan_sweeps(extensions: Sequence[Extension],
         fused_active=cfg.use_kernels and cfg.use_fused,
         fused_second_mask=second_order_mask(extensions),
     )
+
+
+def plan_for_batch(extensions, cfg, n, mesh=None, shard_axes=("data",),
+                   microbatch_size=None):
+    """Compose the right sweep lane for a batch of ``n`` samples.
+
+    The single place consumers (the extended train step, the Laplace
+    fits) derive their lane composition from: shard over ``mesh`` when
+    one is given, accumulate when a microbatch size (argument, or
+    ``cfg.microbatch_size``) asks for more than one slice.
+    ``microbatch_size`` bounds the rows a *device* sweeps per sequential
+    slice — under a mesh the grid already splits the batch over shards,
+    so the count comes from the shard-local batch (a shard whose rows
+    already fit the bound accumulates nothing).  Returns a plan object
+    with the uniform ``.run(model, params, inputs, targets, loss, cfg=,
+    rng=)`` contract — a plain :class:`SweepPlan`, a
+    :class:`ShardedSweepPlan`, an :class:`AccumulatedSweepPlan`, or the
+    shard × accumulate grid.
+    """
+    cfg = cfg or ExtensionConfig()
+    plan = plan_sweeps(extensions, cfg)
+    n_dev = n
+    if mesh is not None:
+        plan = plan.shard(mesh, shard_axes)
+        n_dev = max(1, n // plan.n_shards)
+    mb = microbatch_size or cfg.microbatch_size
+    k = -(-n_dev // mb) if mb else 1
+    if k > 1:
+        plan = plan.accumulate(k)
+    return plan
 
 
 @dataclasses.dataclass
@@ -220,25 +309,45 @@ def _global_sample_offset(axes, n_local):
     return idx * n_local
 
 
-class _ShardScaledLoss:
-    """Loss adapter for the sharded sweep body (inside ``shard_map``).
+class _ScaledLoss:
+    """Loss adapter correcting a partial batch's 1/M normalization.
 
-    Every loss here normalizes by the number M of sample units; a shard
-    only sees its local units, so its cotangents/factors come out scaled
-    by 1/M_local instead of 1/M_global.  This adapter psums M over the
-    data axes and rescales — per-sample quantities then match their
-    single-device counterparts exactly, even when padding masks leave the
-    unit counts uneven across shards.  MC factors additionally get the
-    shard's global sample offset so the per-sample PRNG streams line up
-    with the single-device draws.
+    Every loss here normalizes by the number M of sample units; a body
+    that only sees part of the batch — a shard's rows under ``shard_map``
+    (the sharded lane), a microbatch slice (the accumulated lane), or
+    both — gets cotangents/factors scaled by 1/M_local instead of
+    1/M_global.  This adapter rescales by ``ml / mg``:
+
+    * ``axes`` set, no ``total_units``: the sharded lane — M_global is
+      the psum of the raw local counts over the data axes, and MC factors
+      get the shard's global sample offset so the per-sample PRNG streams
+      line up with the single-device draws.
+    * ``total_units`` set: the accumulated lane — M_global over the whole
+      accumulated batch is computed once by the driver from the full
+      targets and passed in (a psum inside one microbatch could only see
+      that microbatch's units).  The driver also supplies the complete
+      ``sample_offset`` (shard base + microbatch start), so no implicit
+      shard offset is added.
+
+    ``value``/``hessian_mean`` return the partial batch's *contribution*
+    (already psum'd across shards when ``axes`` is set); under the
+    accumulated lane the driver sums contributions over microbatches.
+    Per-sample quantities then match their monolithic single-device
+    counterparts exactly, even when padding masks leave unit counts
+    uneven across shards or microbatches.
     """
 
-    def __init__(self, base, axes):
+    def __init__(self, base, axes=(), total_units=None, sample_offset=0):
         self.base = base
-        self.axes = tuple(axes)
+        self.axes = tuple(axes or ())
+        self.total_units = total_units
+        self.sample_offset = sample_offset
 
     def __getattr__(self, name):
         return getattr(self.base, name)
+
+    def _psum(self, x):
+        return jax.lax.psum(x, self.axes) if self.axes else x
 
     def _m(self, y):
         # num_units is the *raw* count — a fully padded shard reports 0.
@@ -247,12 +356,15 @@ class _ShardScaledLoss:
         # guards the degenerate everything-masked batch.
         raw = self.base.num_units(y)
         ml = jnp.maximum(raw, 1.0)
-        mg = jnp.maximum(jax.lax.psum(raw, self.axes), 1.0)
+        if self.total_units is not None:
+            mg = jnp.maximum(self.total_units, 1.0)
+        else:
+            mg = jnp.maximum(self._psum(raw), 1.0)
         return ml, mg
 
     def value(self, z, y):
         ml, mg = self._m(y)
-        return jax.lax.psum(self.base.value(z, y) * ml, self.axes) / mg
+        return self._psum(self.base.value(z, y) * ml) / mg
 
     def grad(self, z, y):
         ml, mg = self._m(y)
@@ -261,6 +373,12 @@ class _ShardScaledLoss:
 
     def n_exact_cols(self, z):
         return self.base.n_exact_cols(z)
+
+    def _offset(self, z):
+        off = self.sample_offset
+        if self.axes and self.total_units is None:
+            off = off + _global_sample_offset(self.axes, z.shape[0])
+        return off
 
     def sqrt_hessian(self, z, y):
         return self.sqrt_hessian_chunk(z, y, 0, self.n_exact_cols(z))
@@ -272,13 +390,29 @@ class _ShardScaledLoss:
 
     def sqrt_hessian_mc(self, rng, z, y, k=1, sample_offset=0):
         ml, mg = self._m(y)
-        off = sample_offset + _global_sample_offset(self.axes, z.shape[0])
+        off = sample_offset + self._offset(z)
         S = self.base.sqrt_hessian_mc(rng, z, y, k, sample_offset=off)
         return (S.astype(jnp.float32) * jnp.sqrt(ml / mg)).astype(S.dtype)
 
     def hessian_mean(self, z, y):
         ml, mg = self._m(y)
-        return jax.lax.psum(self.base.hessian_mean(z, y) * ml, self.axes) / mg
+        return self._psum(self.base.hessian_mean(z, y) * ml) / mg
+
+
+def _default_rng(sweeps, cfg, rng):
+    """MC-sweep rng defaulting shared by every lane: an explicit key wins,
+    else ``cfg.mc_seed`` (deterministic sweeps), else an error when an MC
+    extension actually needs draws — and an unused placeholder key when
+    none does."""
+    if rng is not None:
+        return rng
+    if "ggn_mc" in sweeps:
+        if cfg.mc_seed is None:
+            raise ValueError(
+                "MC extensions need an rng key: pass rng= or set "
+                "ExtensionConfig(mc_seed=...) for deterministic sweeps")
+        return jax.random.PRNGKey(cfg.mc_seed)
+    return jax.random.PRNGKey(0)  # unused without an MC sweep
 
 
 def _chan_merge(a, b):
@@ -292,20 +426,26 @@ def _chan_merge(a, b):
     return n, mean, m2
 
 
-def _sharded_variance(sum_g2, grad_local, n_local, axes):
-    """Global gradient variance across shards, moment-merge style.
+def _moment_triple(sum_g2, grad_sum, n):
+    """(count, mean, M2) triple from a partial batch's (Σg², Σg)."""
+    nl = jnp.float32(n)
+    g1 = grad_sum.astype(jnp.float32)
+    return nl, g1 / nl, sum_g2 - g1 ** 2 / nl
+
+
+def _sharded_moment_triple(sum_g2, grad_local, n_local, axes):
+    """Global (count, mean, M2) triple across shards, moment-merge style.
 
     Each shard contributes its local (Σg, Σg²) as a (count, mean, M2)
     triple; a binary tree of :func:`_chan_merge` steps combines the
     all-gathered triples without ever forming the catastrophically
     cancelling global Σg² − (Σg)²/n difference between large
-    intermediates.  The result ``n·M2`` equals the engine's single-device
-    ``n·Σg² − (Σg)²`` in exact arithmetic.
+    intermediates.  ``n·M2`` of the result equals the engine's
+    single-device ``n·Σg² − (Σg)²`` in exact arithmetic.
     """
     g1 = jax.lax.all_gather(grad_local.astype(jnp.float32), tuple(axes))
     g2 = jax.lax.all_gather(sum_g2, tuple(axes))
-    nl = jnp.float32(n_local)
-    parts = [(nl, g1[i] / nl, g2[i] - g1[i] ** 2 / nl)
+    parts = [_moment_triple(g2[i], g1[i], n_local)
              for i in range(g1.shape[0])]
     while len(parts) > 1:
         merged = [_chan_merge(parts[i], parts[i + 1])
@@ -313,8 +453,43 @@ def _sharded_variance(sum_g2, grad_local, n_local, axes):
         if len(parts) % 2:
             merged.append(parts[-1])
         parts = merged
-    n, _, m2 = parts[0]
+    return parts[0]
+
+
+def _sharded_variance(sum_g2, grad_local, n_local, axes):
+    """Global gradient variance across shards: ``n·M2`` of the merged
+    triple (see :func:`_sharded_moment_triple`)."""
+    n, _, m2 = _sharded_moment_triple(sum_g2, grad_local, n_local, axes)
     return n * m2
+
+
+def _kron_map(fn, tree, *rest):
+    """Walk Kronecker stats trees applying ``fn(kind, leaf, *others)`` —
+    ``kind`` is ``'A'`` for A/``A_diag`` factors, ``'B'`` for B factors,
+    ``None`` for stray array leaves.  Extra trees walk in lockstep (the
+    accumulator's (new, acc) pairs).  The one factor-key dispatch table
+    keeps the sharded reducer, the sequential accumulator and its
+    finalizer from drifting apart."""
+
+    def rec(node, *others):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                o = tuple(d[k] for d in others)
+                if k in ("A", "A_diag"):
+                    out[k] = jax.tree.map(partial(fn, "A"), v, *o)
+                elif k == "B":
+                    out[k] = jax.tree.map(partial(fn, "B"), v, *o)
+                else:
+                    out[k] = rec(v, *o)
+            return out
+        if isinstance(node, (tuple, list)):
+            return tuple(rec(*z) for z in zip(node, *others))
+        if hasattr(node, "ndim"):
+            return fn(None, node, *others)
+        return node
+
+    return rec(tree, *rest)
 
 
 def _kron_reduce(tree, axes):
@@ -322,23 +497,14 @@ def _kron_reduce(tree, axes):
     factors batch sums (psum); Embedding's diagonal ``A_diag`` reduces
     like ``A``."""
 
-    def rec(node):
-        if isinstance(node, dict):
-            out = {}
-            for k, v in node.items():
-                if k in ("A", "A_diag"):
-                    out[k] = jax.tree.map(
-                        lambda x: jax.lax.pmean(x, axes), v)
-                elif k == "B":
-                    out[k] = jax.tree.map(lambda x: jax.lax.psum(x, axes), v)
-                else:
-                    out[k] = rec(v)
-            return out
-        if isinstance(node, (tuple, list)):
-            return tuple(rec(c) for c in node)
-        return node
+    def red(kind, x):
+        if kind == "A":
+            return jax.lax.pmean(x, axes)
+        if kind == "B":
+            return jax.lax.psum(x, axes)
+        return x
 
-    return rec(tree)
+    return _kron_map(red, tree)
 
 
 def _reduce_sharded(grads, ext, extensions, axes):
@@ -395,6 +561,13 @@ class ShardedSweepPlan:
         """``{extension name: cross-shard reducer}`` for this plan."""
         return reduce_spec([by_name(n) for n in sorted(self.plan.names)])
 
+    def check_batch(self, n: int) -> None:
+        """Raise unless the global batch splits evenly over the shards."""
+        if n % self.n_shards:
+            raise ValueError(
+                f"global batch {n} is not divisible by {self.n_shards} "
+                f"shards over mesh axes {self.axes}")
+
     def describe(self) -> str:
         red = self.reduce_specs()
         placement = ", ".join(
@@ -416,21 +589,8 @@ class ShardedSweepPlan:
         cfg = dataclasses.replace(cfg or ExtensionConfig(),
                                   shard_axes=tuple(self.axes))
         extensions = tuple(by_name(n) for n in sorted(self.plan.names))
-        n = jax.tree.leaves(inputs)[0].shape[0]
-        if n % self.n_shards:
-            raise ValueError(
-                f"global batch {n} is not divisible by {self.n_shards} "
-                f"shards over mesh axes {self.axes}")
-        if rng is None:
-            if "ggn_mc" in self.plan.sweeps:
-                if cfg.mc_seed is None:
-                    raise ValueError(
-                        "MC extensions need an rng key: pass rng= or set "
-                        "ExtensionConfig(mc_seed=...) for deterministic "
-                        "sweeps")
-                rng = jax.random.PRNGKey(cfg.mc_seed)
-            else:
-                rng = jax.random.PRNGKey(0)  # unused without an MC sweep
+        self.check_batch(jax.tree.leaves(inputs)[0].shape[0])
+        rng = _default_rng(self.plan.sweeps, cfg, rng)
 
         batch = P(tuple(self.axes))
         red = self.reduce_specs()
@@ -449,6 +609,286 @@ class ShardedSweepPlan:
         loss_val, grads, logits, ext = fn(params, inputs, targets, rng)
         return Results(loss=loss_val, grads=grads, logits=logits, ext=ext)
 
+    def accumulate(self, num_microbatches: int) -> "AccumulatedSweepPlan":
+        """Stack the sequential lane on top of this sharded plan: the
+        shard × accumulate grid.  Each device scans over
+        ``num_microbatches`` slices of its local batch rows; see
+        :meth:`SweepPlan.accumulate`."""
+        return AccumulatedSweepPlan(plan=self.plan,
+                                    num_microbatches=int(num_microbatches),
+                                    sharded=self)
+
+
+# ---------------------------------------------------------------------------
+# streaming accumulated sweep lane (SweepPlan.accumulate)
+# ---------------------------------------------------------------------------
+
+# Reduce kinds that admit a *sequential* accumulator — the reinterpretation
+# of each extension's cross-shard ``reduce`` spec along the time axis.
+# 'gram' (BatchDot) and 'pmean' (KFRA) are absent on purpose: the Gram row
+# blocks need every other microbatch's factors in memory, and the Ḡ
+# recursion needs the global batch expectation at every layer — neither
+# exists once the batch is streamed.
+_SEQ_ACCUMULATORS = {
+    "psum": "running sum",
+    "concat": "row append",
+    "kron": "weighted A mean + B sum",
+    "moment_merge": "sequential Chan merge",
+}
+
+
+def _is_moment_triple(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"n", "mean", "m2"}
+
+
+def _merge_moment_triples(acc, new):
+    """Fold one microbatch's (count, mean, M2) triples into the running
+    ones — the sequential counterpart of the sharded binary merge tree."""
+
+    def merge(a, b):
+        n, mean, m2 = _chan_merge((a["n"], a["mean"], a["m2"]),
+                                  (b["n"], b["mean"], b["m2"]))
+        return {"n": n, "mean": mean, "m2": m2}
+
+    return jax.tree.map(merge, acc, new, is_leaf=_is_moment_triple)
+
+
+def _finalize_moment_triples(tree):
+    """n·M2 — the engine's ``n·Σg² − (Σg)²`` variance convention."""
+    return jax.tree.map(lambda t: t["n"] * t["m2"], tree,
+                        is_leaf=_is_moment_triple)
+
+
+def _kron_accum(acc, new, w):
+    """Running Kronecker-factor accumulator: A factors are batch *means*,
+    so each microbatch contributes weighted by its raw sample count ``w``
+    (finalized by :func:`_kron_finalize`'s divide by the total); B factors
+    are batch sums and accumulate directly.  Shares :func:`_kron_map`'s
+    factor-key dispatch with the sharded reducer."""
+
+    def step(kind, n_leaf, a_leaf):
+        if kind == "A":
+            return a_leaf + w * n_leaf
+        return a_leaf + n_leaf
+
+    return _kron_map(step, new, acc)
+
+
+def _kron_finalize(tree, n_total):
+    """Turn accumulated weighted A sums back into batch means."""
+    return _kron_map(
+        lambda kind, x: x / n_total if kind == "A" else x, tree)
+
+
+def _accum_merge_ext(red, acc, new, w):
+    """One sequential accumulation step over the extension dict."""
+    out = {}
+    for name, tree in new.items():
+        kind = red.get(name, "psum")
+        if kind == "kron":
+            out[name] = _kron_accum(acc[name], tree, w)
+        elif kind == "moment_merge":
+            out[name] = _merge_moment_triples(acc[name], tree)
+        else:  # 'psum'
+            out[name] = jax.tree.map(jnp.add, acc[name], tree)
+    return out
+
+
+def _run_accumulated(model, params, inputs, targets, loss, extensions,
+                     cfg, rng, num_microbatches, base_offset=0):
+    """Sequential microbatch driver: the identical sweep per slice, folded
+    through the extensions' ``reduce`` specs as sequential accumulators.
+
+    Runs either at top level (single-device accumulated lane) or inside a
+    ``shard_map`` shard body (``cfg.shard_axes`` set — the shard ×
+    accumulate grid, where ``inputs`` are this shard's local rows and
+    ``base_offset`` its first global sample index).  ``cfg`` must already
+    carry ``total_units`` / ``total_batch`` / ``accum_stats``.
+
+    The batch splits into ``ceil(n / k)``-row slices: every full slice
+    runs under one ``lax.scan`` (bounded memory, one trace), an uneven
+    final slice runs as a separate step.  Returns
+    ``(loss, grads, logits, ext)``.
+    """
+    red = reduce_spec(extensions)
+    concat_names = [e.name for e in extensions if red[e.name] == "concat"]
+    carry_names = [e.name for e in extensions if red[e.name] != "concat"]
+    n = jax.tree.leaves(inputs)[0].shape[0]
+    k = max(1, min(int(num_microbatches), n))
+    m = -(-n // k)          # slice rows (ceil); last slice may be smaller
+    k_full = n // m
+    rem = n - k_full * m
+
+    def slice_run(p, key, x_i, y_i, off):
+        cfg_i = dataclasses.replace(cfg, sample_offset=off)
+        res = run(model, p, x_i, y_i, loss, extensions=extensions,
+                  cfg=cfg_i, rng=key)
+        carry_ext = {nm: res.ext[nm] for nm in carry_names}
+        cat_ext = {nm: res.ext[nm] for nm in concat_names}
+        return res.loss, res.grads, carry_ext, res.logits, cat_ext
+
+    def head(a):
+        return a[:m]
+
+    zshape = jax.eval_shape(slice_run, params, rng,
+                            jax.tree.map(head, inputs),
+                            jax.tree.map(head, targets), 0)
+    zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), zshape[:3])
+
+    def split(a):
+        return a[:k_full * m].reshape((k_full, m) + a.shape[1:])
+
+    xs = (jax.tree.map(split, inputs), jax.tree.map(split, targets),
+          base_offset + m * jnp.arange(k_full))
+
+    def body(carry, xs_i):
+        x_i, y_i, off = xs_i
+        lv, g, cext, z, yext = slice_run(params, rng, x_i, y_i, off)
+        a_lv, a_g, a_ext = carry
+        carry = (a_lv + lv, jax.tree.map(jnp.add, a_g, g),
+                 _accum_merge_ext(red, a_ext, cext, float(m)))
+        return carry, (z, yext)
+
+    with jax.named_scope(f"accumscan_T{k_full}"):
+        (lv, grads, c_ext), (zs, ys) = jax.lax.scan(body, zero, xs)
+
+    def unstack(a):
+        return a.reshape((k_full * a.shape[1],) + a.shape[2:])
+
+    logits = jax.tree.map(unstack, zs)
+    cat_ext = {nm: jax.tree.map(unstack, ys[nm]) for nm in concat_names}
+
+    if rem:
+        def tail(a):
+            return a[k_full * m:]
+
+        lv_r, g_r, cext_r, z_r, yext_r = slice_run(
+            params, rng, jax.tree.map(tail, inputs),
+            jax.tree.map(tail, targets), base_offset + k_full * m)
+        lv = lv + lv_r
+        grads = jax.tree.map(jnp.add, grads, g_r)
+        c_ext = _accum_merge_ext(red, c_ext, cext_r, float(rem))
+        cat = partial(jax.tree.map, lambda a, b: jnp.concatenate([a, b], 0))
+        logits = cat(logits, z_r)
+        cat_ext = {nm: cat(cat_ext[nm], yext_r[nm]) for nm in concat_names}
+
+    ext = {}
+    for nm in carry_names:
+        kind = red[nm]
+        if kind == "kron":
+            ext[nm] = _kron_finalize(c_ext[nm], float(n))
+        elif kind == "moment_merge":
+            ext[nm] = _finalize_moment_triples(c_ext[nm])
+        else:
+            ext[nm] = c_ext[nm]
+    ext.update(cat_ext)
+    return lv, grads, logits, ext
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumulatedSweepPlan:
+    """A :class:`SweepPlan` bound to a microbatch schedule — the streaming
+    accumulated lane (optionally stacked on a :class:`ShardedSweepPlan`:
+    the shard × accumulate grid).
+
+    ``run`` executes the identical fused-kernel sweep once per microbatch
+    slice under a ``lax.scan`` driver and folds results through each
+    extension's ``reduce`` spec reinterpreted as a *sequential*
+    accumulator: running sums for ``'psum'``, running sample-count-
+    weighted A / summed B factors for ``'kron'``, in-order row appends
+    for ``'concat'``, and the pairwise Chan moment merge for
+    ``'moment_merge'``.  The loss's 1/M normalization is corrected with
+    the mask-aware *global* unit count (computed once from the full
+    targets), and MC factor draws stay keyed per global sample index —
+    so results match the monolithic sweep up to accumulation order while
+    peak activation/factor memory scales with the microbatch, serving
+    effective batches far beyond device memory.
+
+    Extensions whose reducers need the whole batch at once —
+    ``'gram'`` (BatchDot) and ``'pmean'`` (KFRA) — have no sequential
+    accumulator and are rejected with an actionable error.
+    """
+
+    plan: SweepPlan
+    num_microbatches: int
+    sharded: Optional[ShardedSweepPlan] = None
+
+    def __post_init__(self):
+        # Both construction paths (SweepPlan.accumulate and
+        # ShardedSweepPlan.accumulate) land here — a bad count must raise
+        # on either, not silently clamp to a monolithic sweep.
+        if self.num_microbatches < 1:
+            raise ValueError("num_microbatches must be >= 1 "
+                             f"(got {self.num_microbatches})")
+
+    def describe(self) -> str:
+        base = (self.sharded or self.plan).describe()
+        accs = ", ".join(f"{k}:{v}" for k, v in _SEQ_ACCUMULATORS.items())
+        return (f"{base} | accumulate={self.num_microbatches} microbatches "
+                f"(sequential reduce: {accs})")
+
+    def _check_extensions(self, extensions):
+        red = reduce_spec(extensions)
+        bad = sorted(nm for nm, kd in red.items()
+                     if kd not in _SEQ_ACCUMULATORS)
+        if bad:
+            raise ValueError(
+                f"extensions {bad} have no sequential accumulator: their "
+                "reduce specs ('gram'/'pmean') need the whole batch at "
+                "once — BatchDot's Gram blocks pair samples across "
+                "microbatches and KFRA's Ḡ recursion needs the global "
+                "expectation at every layer.  Run them on a monolithic or "
+                "sharded sweep, or drop them from the accumulated plan.")
+        return red
+
+    def run(self, model, params, inputs, targets, loss,
+            cfg: Optional[ExtensionConfig] = None,
+            rng: Optional[jax.Array] = None) -> Results:
+        """The accumulated analogue of :func:`run` — same signature minus
+        ``extensions`` (the plan carries them), same Results contract."""
+        cfg = cfg or ExtensionConfig()
+        extensions = tuple(by_name(nm) for nm in sorted(self.plan.names))
+        red = self._check_extensions(extensions)
+        n = jax.tree.leaves(inputs)[0].shape[0]
+        rng = _default_rng(self.plan.sweeps, cfg, rng)
+        # Mask-aware global unit count over the WHOLE batch, computed once
+        # from the full targets — each microbatch body rescales its local
+        # factors to this 1/M (see _ScaledLoss).
+        mg = loss.num_units(targets)
+
+        if self.sharded is None:
+            cfg2 = dataclasses.replace(
+                cfg, shard_axes=None, total_units=mg, total_batch=n,
+                accum_stats=True)
+            lv, grads, logits, ext = _run_accumulated(
+                model, params, inputs, targets, loss, extensions, cfg2,
+                rng, self.num_microbatches)
+            return Results(loss=lv, grads=grads, logits=logits, ext=ext)
+
+        sp = self.sharded
+        sp.check_batch(n)
+        n_local = n // sp.n_shards
+        batch = P(tuple(sp.axes))
+        ext_specs = {nm: (batch if red[nm] == "concat" else P())
+                     for nm in self.plan.names}
+        cfg2 = dataclasses.replace(cfg, shard_axes=tuple(sp.axes),
+                                   total_batch=n, accum_stats=True)
+        k = self.num_microbatches
+
+        def body(p, x, y, key, mg_):
+            cfg_b = dataclasses.replace(cfg2, total_units=mg_)
+            base = _global_sample_offset(sp.axes, n_local)
+            return _run_accumulated(model, p, x, y, loss, extensions,
+                                    cfg_b, key, k, base_offset=base)
+
+        fn = _shard_map(body, mesh=sp.mesh,
+                        in_specs=(P(), batch, batch, P(), P()),
+                        out_specs=(P(), P(), batch, ext_specs),
+                        check_rep=False)
+        lv, grads, logits, ext = fn(params, inputs, targets, rng,
+                                    jnp.asarray(mg, jnp.float32))
+        return Results(loss=lv, grads=grads, logits=logits, ext=ext)
+
 
 def run(
     model: Module,
@@ -460,16 +900,71 @@ def run(
     cfg: Optional[ExtensionConfig] = None,
     rng: Optional[jax.Array] = None,
 ) -> Results:
+    """One generalized backward pass: batch gradient + K extensions.
+
+    The engine's front door (re-exported as ``repro.core.run``).  A
+    single forward pass is followed by the sweeps the extension set
+    needs — the cotangent sweep always runs (it produces the batch
+    gradient and every first-order statistic), plus at most one factor
+    sweep per curvature family: the exact loss-Hessian factorization
+    ``S`` with ``S Sᵀ = ∇²_z L`` (Eq. 15/18), its Monte-Carlo counterpart
+    (Eq. 20), the averaged Ḡ recursion (Eq. 24), or the signed residual
+    factors of the exact Hessian diagonal (Eq. 25/26).
+
+    Parameters
+    ----------
+    model : Module
+        A ``repro.core`` module tree (e.g. ``Sequential`` of layers).
+    params
+        Parameter pytree, as returned by ``model.init``.
+    inputs : array or pytree
+        Batch inputs, leading sample axis N.
+    targets : array
+        Loss targets; ``CrossEntropyLoss`` masks positions with
+        ``targets < 0``.
+    loss
+        ``CrossEntropyLoss`` or ``MSELoss`` (anything exposing the
+        ``repro.core.loss_hessian`` derivative protocol).
+    extensions : sequence of Extension
+        Quantities to extract, e.g. ``(BatchL2, Variance, KFAC)``.
+    cfg : ExtensionConfig, optional
+        Kernel routing, MC sample count/seed, class chunking,
+        microbatch size; see :class:`ExtensionConfig`.
+    rng : jax.Array, optional
+        PRNG key for the MC factor sweep.  Optional when
+        ``cfg.mc_seed`` is set; required (or the seed) whenever an MC
+        extension (DiagGGNMC / KFAC) is requested.
+
+    Returns
+    -------
+    Results
+        ``loss`` (scalar mean loss), ``grads`` (params-shaped pytree),
+        ``logits`` ``[N, ..., C]``, and ``ext[name]`` — one entry per
+        requested extension mirroring the params structure: per-sample
+        rows ``[N, ...]`` for BatchGrad/BatchL2/GGNTrace, ``[N, N]``
+        Gram matrices for BatchDot, parameter-shaped reductions for the
+        moments and GGN/Hessian diagonals (Eq. 19), and per-layer
+        ``{'A': [a, a], 'B': [b, b]}`` Kronecker blocks (Eq. 23) for
+        KFAC/KFLR/KFRA.
+
+    Notes
+    -----
+    Pure-functional and jit-compatible; wrap in ``jax.jit`` freely.  For
+    batches beyond device memory or multi-device execution, bind the
+    plan first: ``plan_sweeps(exts, cfg).shard(mesh).accumulate(k).run(...)``.
+    """
     cfg = cfg or ExtensionConfig()
     plan = plan_sweeps(extensions, cfg)
     sweeps = plan.sweeps
     first_exts, kron_exts = plan.first_exts, plan.kron_exts
-    # Inside a shard_map body (the ShardedSweepPlan lane): correct the
-    # loss normalization from shard-local to global so every per-sample
-    # quantity below matches its single-device value.
+    # Inside a shard_map body (the ShardedSweepPlan lane) and/or a
+    # microbatch body (the AccumulatedSweepPlan lane): correct the loss
+    # normalization from partial-batch to global so every per-sample
+    # quantity below matches its monolithic single-device value.
     axes = cfg.shard_axes
-    if axes:
-        loss = _ShardScaledLoss(loss, axes)
+    if axes or cfg.total_units is not None:
+        loss = _ScaledLoss(loss, axes or (), cfg.total_units,
+                           cfg.sample_offset)
 
     # ---- forward ----------------------------------------------------------
     z, tape = model.forward_tape(params, inputs)
@@ -495,14 +990,33 @@ def run(
     if "second_moment" in names or "variance" in names:
         sum_g2 = _merge_stat_trees(stats, "_sum_grad2")
         n = jax.tree.leaves(inputs)[0].shape[0]
-        n_total = (jnp.float32(n) * _axis_count(axes) if axes
-                   else float(n))
+        if cfg.total_batch is not None:
+            # Accumulated lane: SecondMoment/Variance scale with the raw
+            # batch size of the WHOLE accumulated batch, not this
+            # microbatch's slice.
+            n_total = jnp.float32(cfg.total_batch)
+        else:
+            n_total = (jnp.float32(n) * _axis_count(axes) if axes
+                       else float(n))
         if "second_moment" in names:
             ext["second_moment"] = jax.tree.map(
                 lambda s: s * n_total, sum_g2
             )
         if "variance" in names:
-            if axes:
+            if cfg.accum_stats:
+                # Accumulation-driver body: emit the mergeable raw
+                # (count, mean, M2) triple for this partial batch — the
+                # driver folds triples across microbatches with the
+                # pairwise Chan merge and finalizes n·M2 at the end.
+                # Under a sharded microbatch the triple is already merged
+                # across shards (and replicated).
+                def triple(s, gr):
+                    t = (_sharded_moment_triple(s, gr, n, axes) if axes
+                         else _moment_triple(s, gr, n))
+                    return {"n": t[0], "mean": t[1], "m2": t[2]}
+
+                ext["variance"] = _zip_stats(triple, sum_g2, grads)
+            elif axes:
                 # moment-merge reducer: local (Σg, Σg²) pairs combine
                 # across shards via stable pairwise Chan merges; the
                 # result is already global (reducer 'moment_merge').
@@ -546,12 +1060,7 @@ def run(
 
     if "ggn_mc" in sweeps:
         mc_exts = tuple(e for e in extensions if e.sweep == "ggn_mc")
-        if rng is None:
-            if cfg.mc_seed is None:
-                raise ValueError(
-                    "MC extensions need an rng key: pass rng= or set "
-                    "ExtensionConfig(mc_seed=...) for deterministic sweeps")
-            rng = jax.random.PRNGKey(cfg.mc_seed)
+        rng = _default_rng(sweeps, cfg, rng)
         S = loss.sqrt_hessian_mc(rng, z, targets, cfg.mc_samples)
         _, curv = model.curv_backward(params, tape, S, mc_exts, cfg, "mc")
         if "diag_ggn_mc" in names:
@@ -623,7 +1132,7 @@ def local_loss_and_grad(model, params, inputs, targets, loss, axes):
     the engine's own sharded lane would otherwise have performed
     internally.  ``psum(local grads) == run(...).grads`` exactly.
     """
-    sloss = _ShardScaledLoss(loss, axes)
+    sloss = _ScaledLoss(loss, axes)
     z, tape = model.forward_tape(params, inputs)
     lv = sloss.value(z, targets)
     g = sloss.grad(z, targets)

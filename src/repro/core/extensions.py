@@ -17,50 +17,105 @@ requested extensions to decide which backward sweeps to run:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 
 @dataclasses.dataclass(frozen=True)
 class Extension:
+    """One extractable quantity (a row of the paper's Table 1/5).
+
+    An extension is a *pure declaration* — three static strings the engine
+    plans sweeps from.  The declaration is also what the scale-out lanes
+    act on: ``reduce`` names how partial results combine across the batch
+    axis, whether that axis is split over devices
+    (:meth:`~repro.core.engine.SweepPlan.shard`) or over time
+    (:meth:`~repro.core.engine.SweepPlan.accumulate`).
+
+    Parameters
+    ----------
+    name : str
+        Key of the statistic in ``Results.ext``.
+    sweep : {'first', 'ggn_exact', 'ggn_mc', 'kfra', 'hess'}
+        Which backward sweep produces it.
+    reduce : {'psum', 'concat', 'gram', 'kron', 'pmean', 'moment_merge'}
+        How partial results over a split batch combine:
+
+        ``'psum'``
+            Sum the partial batch reductions (GGN/Hessian diagonals,
+            second moment).  Sharded: ``lax.psum``; accumulated: running
+            sum.
+        ``'concat'``
+            Per-sample rows — each shard/microbatch owns its samples'
+            rows, concatenated in sample order.
+        ``'gram'``
+            Pairwise per-sample stats ([N, N] Gram matrices): each shard
+            computes its row block against the all-gathered factors.
+            *No sequential accumulator* — a streamed microbatch cannot
+            see the other microbatches' factors, so the accumulated lane
+            rejects it.
+        ``'kron'``
+            Kronecker factor pairs (Eq. 23): A factors are batch *means*
+            (sharded: pmean; accumulated: running sample-count-weighted
+            mean), B factors batch sums (psum / running sum).
+        ``'pmean'``
+            Batch-averaged statistics (KFRA's Ḡ recursion, Eq. 24).  The
+            recursion needs the global expectation at *every layer*, so
+            it pmeans inline under sharding and has *no sequential
+            accumulator*.
+        ``'moment_merge'``
+            Mean/variance pairs via the numerically stable pairwise
+            (Chan) moment merge — across shards in a binary tree, across
+            microbatches as a sequential left fold.
+    """
+
     name: str
-    sweep: str  # 'first' | 'ggn_exact' | 'ggn_mc' | 'kfra' | 'hess'
-    # How shard-local results combine across a data-parallel mesh axis
-    # (the batch-sharded sweep lane, ``SweepPlan.shard``):
-    #   'psum'         sum the per-shard partial reductions (batch-summed
-    #                  statistics: GGN/Hessian diagonals, second moment)
-    #   'concat'       per-sample stats — each shard owns its samples'
-    #                  rows; the sharded out-spec concatenates them
-    #   'gram'         pairwise per-sample stats ([N, N] Gram matrices):
-    #                  each shard computes its row block against the
-    #                  all-gathered factors, rows concatenate
-    #   'kron'         Kronecker factor pairs: A factors are batch *means*
-    #                  (pmean), B factors batch sums (psum)
-    #   'pmean'        batch-averaged statistics (KFRA's Ḡ recursion)
-    #   'moment_merge' mean/variance pairs via the numerically stable
-    #                  pairwise (Chan) moment merge across shards
+    sweep: str
     reduce: str = "psum"
 
 
 # --- first-order extensions (paper §2.2, App. A.1) -------------------------
 BatchGrad = Extension("batch_grad", "first", reduce="concat")
+"""Per-sample gradients ``[N, *param]`` of the mean loss (paper Eq. 5)."""
+
 BatchL2 = Extension("batch_l2", "first", reduce="concat")
-# beyond-paper (BackPACK-2.x-style): pairwise per-sample gradient dots —
-# gradient-similarity / conflict telemetry, Gram-trick computed
+"""Per-sample squared gradient norms ``[N]`` via the Gram trick (Eq. 9)."""
+
 BatchDot = Extension("batch_dot", "first", reduce="gram")
+"""Pairwise per-sample gradient dots ``[N, N]`` — beyond-paper
+(BackPACK-2.x-style) gradient-similarity / conflict telemetry."""
+
 SecondMoment = Extension("second_moment", "first", reduce="psum")
+"""Batch-scaled second moment ``N·Σ_n g_n²`` per parameter (Eq. 10)."""
+
 Variance = Extension("variance", "first", reduce="moment_merge")
+"""Per-parameter gradient variance ``N·Σg² − (Σg)²`` (Eq. 11)."""
 
 # --- second-order extensions (paper §2.3, App. A.2) -------------------------
 DiagGGN = Extension("diag_ggn", "ggn_exact", reduce="psum")
+"""Exact generalized-Gauss-Newton diagonal per parameter (Eq. 19)."""
+
 DiagGGNMC = Extension("diag_ggn_mc", "ggn_mc", reduce="psum")
+"""Monte-Carlo GGN diagonal (the Eq. 20 factorization of Eq. 19)."""
+
 KFLR = Extension("kflr", "ggn_exact", reduce="kron")
+"""Kronecker-factored low-rank GGN blocks ``A ⊗ B`` with the exact
+loss-Hessian factor in ``B`` (Eq. 23)."""
+
 KFAC = Extension("kfac", "ggn_mc", reduce="kron")
+"""KFAC blocks — the Eq. 23 Kronecker pair with the MC factor in ``B``."""
+
 KFRA = Extension("kfra", "kfra", reduce="pmean")
+"""Kronecker factors from the batch-averaged Ḡ recursion (Eq. 24);
+chain (Sequential-of-Dense/activation) models only."""
+
 DiagHessian = Extension("diag_hessian", "hess", reduce="psum")
-# beyond-paper: per-sample GGN trace [N] — curvature-concentration telemetry
-# (which samples dominate the loss curvature); a marginal-cost output of the
-# fused second-order kernel.  Dense-shaped layers (Dense / Conv2d) only.
+"""Exact Hessian diagonal via signed residual factors (Eq. 25/26);
+chain models only."""
+
 GGNTrace = Extension("ggn_trace", "ggn_exact", reduce="concat")
+"""Per-sample GGN trace ``[N]`` — beyond-paper curvature-concentration
+telemetry (which samples dominate the loss curvature); a marginal-cost
+output of the fused second-order kernel.  Dense-shaped layers only."""
 
 ALL_EXTENSIONS = (
     BatchGrad,
@@ -171,7 +226,43 @@ def second_order_mask(exts_or_names) -> FusedSecondMask:
 
 @dataclasses.dataclass(frozen=True)
 class ExtensionConfig:
-    """Knobs shared by the engine's sweeps."""
+    """Knobs shared by the engine's sweeps.
+
+    Parameters
+    ----------
+    mc_samples : int
+        Number of Monte-Carlo columns C̃ for the MC loss-Hessian
+        factorization (paper Eq. 20).  Cost is ~1 gradient-like sweep per
+        sample; variance of DiagGGNMC/KFAC shrinks as 1/C̃.
+    mc_seed : int, optional
+        Deterministic PRNG seed for the MC sweep when no explicit ``rng``
+        is passed to :func:`repro.core.run`.
+    class_chunk : int, optional
+        Chunk size over the exact factor's leading U·C axis — exact
+        curvature at LM-vocabulary scale with bounded memory.
+    use_kernels : bool
+        Route moment formulas through the Pallas kernels in
+        ``repro.kernels`` (interpret mode on CPU); pure-jnp einsums
+        otherwise.
+    use_fused : bool
+        With ``use_kernels``: one fused kernel launch per layer per sweep
+        (the default) vs the per-extension legacy path (the benchmark
+        baseline).
+    microbatch_size : int, optional
+        Stream the sweep over microbatches of at most this many samples
+        *per device* (the accumulated lane, ``SweepPlan.accumulate``):
+        consumers — ``make_extended_train_step``, ``train.loop.fit``,
+        the Laplace ``fit`` methods — compose lanes via
+        ``engine.plan_for_batch``, which folds each extension's
+        ``reduce`` spec sequentially over ``ceil(N_device /
+        microbatch_size)`` slices, serving effective batches far beyond
+        device memory.  Under a mesh the bound applies to the
+        shard-local rows (the grid already splits the batch spatially).
+    shard_axes : tuple of str, optional
+        Mesh axis names the batch is sharded over — set by the sharded
+        sweep lane for the body it runs under ``shard_map``; never set
+        this by hand.
+    """
 
     mc_samples: int = 1          # C̃ for the MC factorization (paper Eq. 20)
     # Explicit PRNG seed for the MC sweep (DiagGGNMC / KFAC).  When the
@@ -192,6 +283,11 @@ class ExtensionConfig:
     # separate kernel or einsum per statistic) — kept as the baseline the
     # fused paths are benchmarked against.
     use_fused: bool = True
+    # Stream the sweep over microbatches of at most this many samples (the
+    # accumulated lane).  Consumed by make_extended_train_step /
+    # train.loop.fit / the Laplace fits, which route through
+    # ``SweepPlan.accumulate(ceil(N / microbatch_size))``.
+    microbatch_size: Optional[int] = None
     # Mesh axis names the batch is sharded over, set by the sharded sweep
     # lane (``SweepPlan.shard``) for the body it runs under
     # ``jax.shard_map``.  When set, the engine corrects the loss's 1/M
@@ -201,3 +297,18 @@ class ExtensionConfig:
     # applied before results leave the shard body.  None = single-device
     # semantics (the default; never set this by hand outside shard_map).
     shard_axes: Optional[tuple] = None
+    # --- accumulation-driver fields -----------------------------------------
+    # Set by ``AccumulatedSweepPlan.run`` for the microbatch bodies it
+    # drives; never set these by hand.  ``total_units`` is the mask-aware
+    # global unit count M over the WHOLE accumulated batch (the engine's
+    # loss adapter rescales microbatch-local factors to the global 1/M
+    # normalization), ``total_batch`` the global raw sample count N (the
+    # batch-size scale of SecondMoment/Variance), ``sample_offset`` the
+    # global index of this microbatch's first sample (per-sample MC PRNG
+    # streams), and ``accum_stats`` makes the engine emit mergeable raw
+    # accumulators (Chan (count, mean, M2) triples for Variance) instead
+    # of finalized statistics.
+    total_units: Optional[Any] = None
+    total_batch: Optional[int] = None
+    sample_offset: Any = 0
+    accum_stats: bool = False

@@ -90,7 +90,39 @@ _JIT_CACHE: Dict[Tuple, Callable] = {}
 
 def register(name: str, *, ref: Optional[Callable] = None,
              description: str = ""):
-    """Decorator adding a padded kernel wrapper to the dispatch table."""
+    """Decorator adding a padded kernel wrapper to the dispatch table.
+
+    Parameters
+    ----------
+    name : str
+        Registry key.  :func:`dispatch` and the public aliases resolve
+        kernels by this name; benchmark lanes and the differential tests
+        enumerate :func:`registered` to find it.
+    ref : callable, optional
+        Pure-jnp oracle with the same signature — the correctness
+        baseline the differential suite compares the kernel against.
+    description : str, optional
+        One-line summary for tooling (defaults to the wrapper's first
+        docstring line).
+
+    Returns
+    -------
+    callable
+        The decorator.  The wrapped function receives ``interpret=``
+        from the registry (CPU interpreter vs compiled Mosaic) and owns
+        only its pad/slice policy; blocks it does not pin are auto-sized
+        from the shapes it is *called* with — under the sharded sweep
+        lane that is the shard-local batch, under the accumulated lane
+        the microbatch slice, so streaming a batch automatically shrinks
+        the per-launch working set (see ``_auto_class_chunk``).
+
+    Examples
+    --------
+    >>> @register("my_stat", ref=ref.my_stat)
+    ... def _my_stat(A, B, *, block_a=128, interpret=True):
+    ...     '''stat[n] = reduce(A_n, B_n): A [N, R, a], B [N, R, b].'''
+    ...     ...
+    """
 
     def deco(fn):
         _REGISTRY[name] = KernelSpec(
@@ -182,8 +214,11 @@ def _auto_class_chunk(S2, ba, bb, *, mxu_intermediate, kron_view=False):
     the full-width second S view for the Kronecker output.  The estimate
     scales with the batch the kernel actually sees — under the
     batch-sharded sweep lane (``SweepPlan.shard``) that is the
-    *shard-local* N, so smaller shards automatically take larger class
-    chunks (fewer grid steps) inside the same ~4 MiB budget.
+    *shard-local* N, and under the streaming accumulated lane
+    (``SweepPlan.accumulate``) the *microbatch* slice, so smaller shards
+    or microbatches automatically take larger class chunks (fewer grid
+    steps) inside the same ~4 MiB budget.  The two compose: the shard ×
+    accumulate grid sizes chunks from the shard-local microbatch.
     """
     n2, r2 = S2.shape[1], S2.shape[2]
     per_c = n2 * r2 * bb

@@ -78,18 +78,23 @@ def _likelihood_of(loss) -> str:
 
 
 def _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
-               mesh, shard_axes):
-    """One engine sweep — single-device, or batch-sharded over ``mesh``.
+               mesh, shard_axes, microbatch_size=None):
+    """One engine sweep — single-device, batch-sharded over ``mesh``,
+    and/or streamed over microbatches.
 
     With a mesh the sweep routes through ``SweepPlan.shard`` (the fused
     kernels run per shard, curvature psums per the extensions' reduce
     specs), so the same fit call serves 1..N devices and the returned
     curvature trees are placement-identical to the single-device ones.
+    With ``microbatch_size`` (argument, or ``cfg.microbatch_size``) it
+    additionally routes through ``SweepPlan.accumulate`` — the posterior
+    curvature is folded sequentially over ``ceil(N / microbatch_size)``
+    slices, so posterior fitting runs at LM-scale batches on one device.
     """
-    if mesh is None:
-        return eng.run(model, params, x, y, loss, extensions=extensions,
-                       cfg=cfg, rng=rng)
-    plan = eng.plan_sweeps(extensions, cfg).shard(mesh, shard_axes)
+    n = jax.tree.leaves(x)[0].shape[0]
+    plan = eng.plan_for_batch(extensions, cfg, n, mesh=mesh,
+                              shard_axes=shard_axes,
+                              microbatch_size=microbatch_size)
     return plan.run(model, params, x, y, loss, cfg=cfg, rng=rng)
 
 
@@ -222,12 +227,13 @@ class DiagLaplace(_EvidenceMixin):
     @classmethod
     def fit(cls, model, params, x, y, loss, *, mc: bool = False,
             prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
-            rng=None, extensions=None, mesh=None, shard_axes=("data",)):
+            rng=None, extensions=None, mesh=None, shard_axes=("data",),
+            microbatch_size: Optional[int] = None):
         cfg, extensions, rng = _fit_args(
             cfg, extensions, rng, mc, default=(DiagGGNMC,) if mc else (DiagGGN,))
         _require_structure("diag", extensions, cfg)
         res = _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
-                         mesh, shard_axes)
+                         mesh, shard_axes, microbatch_size)
         name = "diag_ggn_mc" if "diag_ggn_mc" in res.ext else "diag_ggn"
         curv = res.ext[name]
         try:
@@ -314,12 +320,13 @@ class KronLaplace(_EvidenceMixin):
     @classmethod
     def fit(cls, model, params, x, y, loss, *, mc: bool = False,
             prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
-            rng=None, extensions=None, mesh=None, shard_axes=("data",)):
+            rng=None, extensions=None, mesh=None, shard_axes=("data",),
+            microbatch_size: Optional[int] = None):
         cfg, extensions, rng = _fit_args(
             cfg, extensions, rng, mc, default=(KFAC,) if mc else (KFLR,))
         _require_structure("kron", extensions, cfg)
         res = _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
-                         mesh, shard_axes)
+                         mesh, shard_axes, microbatch_size)
         name = "kfac" if "kfac" in res.ext else "kflr"
         kron_tree = res.ext[name]
         # Validate coverage (and surface the actionable message now, not at
@@ -527,8 +534,48 @@ def _fit_args(cfg, extensions, rng, mc, default):
 
 def fit_posterior(model, params, x, y, loss, *, structure: str = "diag",
                   last_layer: bool = False, **kw):
-    """Fit a Laplace posterior: structure 'diag' | 'kron', optionally
-    restricted to the last layer."""
+    """Fit a Laplace posterior from one engine sweep.
+
+    Parameters
+    ----------
+    model, params
+        The trained model (``repro.core`` Module) and its MAP parameters
+        ``θ*``.
+    x, y
+        Fitting batch: inputs ``[N, ...]`` and targets.
+    loss
+        ``CrossEntropyLoss`` or ``MSELoss`` — fixes the likelihood and
+        the 1/M normalization folded into the curvature factors.
+    structure : {'diag', 'kron'}
+        Posterior precision structure: elementwise GGN diagonals
+        (Eq. 19) or π-damped per-layer Kronecker blocks ``A ⊗ B``
+        (Eq. 23).
+    last_layer : bool
+        Restrict the posterior to the final Dense layer (the LM-scale
+        path): the feature extractor stays a point estimate and the
+        sweep runs on the head alone.
+    **kw
+        Forwarded to the structure's ``fit``: ``mc=True`` for the
+        Monte-Carlo factorization (Eq. 20), ``prior_prec``, ``cfg``
+        (``ExtensionConfig``), ``rng``, ``mesh``/``shard_axes`` for the
+        batch-sharded sweep, and ``microbatch_size`` for the streaming
+        accumulated sweep (posterior fits at batches beyond device
+        memory).
+
+    Returns
+    -------
+    DiagLaplace | KronLaplace | LastLayerLaplace
+        A fitted posterior exposing evidence pieces (``log_lik``,
+        ``log_det_ratio``, ``scatter``), ``sample`` and the predictive
+        hooks ``repro.laplace.predictive`` consumes.
+
+    Raises
+    ------
+    LaplaceStructureError
+        When the extension set cannot serve ``structure`` (see
+        ``SweepPlan.posterior_structures``) or the model lacks the
+        required layer structure — the message says what to change.
+    """
     if last_layer:
         return LastLayerLaplace.fit(model, params, x, y, loss,
                                     structure=structure, **kw)

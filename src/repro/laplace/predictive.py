@@ -185,10 +185,42 @@ def _dense_glm_closed_form(head, params, post, x):
 
 
 def glm_predictive(model, params, posterior, x, *, use_kernels: bool = True):
-    """Linearized predictive: (mean [N, C], variance [N, C]).
+    """Linearized (GLM) posterior predictive.
 
-    For regression posteriors the variance is the function-space
-    ``diag(J Σ Jᵀ)``; add ``sigma_noise²`` for the observation predictive.
+    Linearizes the network at the MAP estimate, so the function-space
+    predictive is Gaussian: ``mean = f(x; θ*)``, ``var = diag(J Σ Jᵀ)``
+    with ``J`` the output/parameter Jacobian and ``Σ`` the fitted Laplace
+    covariance.  The Jacobian factors come from the engine's
+    identity-seeded factor sweep (the Eq. 18 propagation with ``S₀ = I``)
+    and contract against ``Σ`` via the fused ``predictive_var`` Pallas
+    kernel — the ``[C, N, a, b]`` per-sample Jacobian tensor never
+    materializes.
+
+    Parameters
+    ----------
+    model, params
+        The model and MAP parameters the posterior was fitted around.
+        For :class:`~repro.laplace.posterior.LastLayerLaplace` the
+        feature extractor runs once and the head predictive uses a
+        closed form (no identity seed) — the LM-vocabulary-scale path.
+    posterior
+        A fitted ``DiagLaplace`` / ``KronLaplace`` / ``LastLayerLaplace``.
+    x : array
+        Inputs ``[N, ...]``.
+    use_kernels : bool
+        Route the variance contraction through the fused Pallas kernel
+        (default); ``False`` keeps the naive per-sample-Jacobian einsum
+        as the differential/benchmark baseline.
+
+    Returns
+    -------
+    mean : array, ``[N, C]``
+        MAP outputs.
+    var : array, ``[N, C]``
+        Function-space predictive variance ``diag(J Σ Jᵀ)``.  For
+        regression add ``sigma_noise²`` for the observation predictive;
+        for classification feed both through
+        :func:`probit_predictive` for calibrated probabilities.
     """
     if isinstance(posterior, LastLayerLaplace):
         feats, head, f_params, h_params = split_last_dense(model, params)

@@ -35,6 +35,12 @@ def main():
                     help="run extension sweeps batch-sharded over all "
                          "local devices (SweepPlan.shard lane; batch must "
                          "divide the device count)")
+    ap.add_argument("--microbatch-size", type=int, default=None,
+                    help="stream each batch through the accumulated sweep "
+                         "lane (SweepPlan.accumulate) in slices of at most "
+                         "this many samples — identical numbers, activation "
+                         "memory bounded by the microbatch; composes with "
+                         "--shard-sweep (the shard x accumulate grid)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -59,6 +65,12 @@ def main():
     if args.track_variance:
         extensions = tuple(extensions) + (Variance,)
         track = ("variance",)
+    if args.microbatch_size:
+        ext_cfg = dataclasses.replace(ext_cfg or ExtensionConfig(),
+                                      microbatch_size=args.microbatch_size)
+        print(f"[accumulate] microbatch_size={args.microbatch_size} "
+              f"({-(-args.batch // args.microbatch_size)} microbatches "
+              f"per step)")
 
     mesh = None
     if args.shard_sweep and extensions:

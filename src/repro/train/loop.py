@@ -48,7 +48,12 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
     """Train `model` (built from arch config `cfg`) on synthetic data.
 
     With ``mesh`` the extended step runs the batch-sharded sweep lane
-    (``SweepPlan.shard``) — same numbers, N devices."""
+    (``SweepPlan.shard``) — same numbers, N devices.  With
+    ``ext_cfg=ExtensionConfig(microbatch_size=...)`` the step streams each
+    batch through the accumulated lane (``SweepPlan.accumulate``): the
+    extended step folds every extension's sequential reducer along, and
+    the plain step falls back to classic lax.scan gradient accumulation —
+    either way the loop serves effective batches beyond device memory."""
     loss = CrossEntropyLoss()
     params = model.init(jax.random.PRNGKey(loop.seed))
     opt_state = opt.init(params)
@@ -66,7 +71,22 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
             model, loss, opt, extensions, ext_cfg, track=track,
             mesh=mesh, shard_axes=shard_axes))
     else:
-        step_fn = jax.jit(make_train_step(model, loss, opt))
+        microbatch = 1
+        if ext_cfg is not None and ext_cfg.microbatch_size:
+            nb = loop.batch_override or shape.global_batch
+            k = max(1, -(-nb // ext_cfg.microbatch_size))
+            microbatch = k
+            while nb % microbatch:  # make_train_step needs even slices
+                microbatch += 1
+            if microbatch != k:
+                # e.g. prime nb: the only even split ≥ k may be far finer
+                # than asked — stay memory-safe but say so (the extended
+                # path handles uneven slices exactly; this one reshapes).
+                log_fn(f"[accumulate] batch {nb} has no even split into "
+                       f"≤{ext_cfg.microbatch_size}-sample slices; using "
+                       f"{microbatch} microbatches of {nb // microbatch}")
+        step_fn = jax.jit(make_train_step(model, loss, opt,
+                                          microbatch=microbatch))
 
     wd = Watchdog()
     history = []

@@ -9,7 +9,10 @@ scale/variance telemetry.
 Options map to the §Perf hillclimb levers:
   * ``microbatch`` — gradient accumulation via lax.scan (activation memory
     ÷ microbatches; the per-microbatch psum overlaps the next microbatch's
-    compute under XLA's latency-hiding scheduler),
+    compute under XLA's latency-hiding scheduler).  The extended step gets
+    the same lever from ``ExtensionConfig(microbatch_size=...)``, which
+    routes through the engine's ``SweepPlan.accumulate`` lane so the
+    accumulation carries every extension statistic along, exactly,
   * ``remat``     — rematerialize each block (checkpoint policy),
   * ``seq_shard_axis`` — Megatron-style sequence sharding of the residual
     stream between blocks (activation memory ÷ |model|).
@@ -89,22 +92,29 @@ def make_extended_train_step(model, loss, opt, extensions,
     (``SweepPlan.shard`` over ``shard_axes``) — fused kernels on each
     device's batch shard, statistic-aware cross-shard reduction — and the
     step is numerically identical on 1 or N devices.
+
+    With ``cfg.microbatch_size`` the sweep additionally routes through the
+    streaming accumulated lane (``SweepPlan.accumulate`` — gradient
+    accumulation that carries every extension along): each device
+    processes its batch in sequential slices of at most
+    ``microbatch_size`` samples with per-extension sequential reducers,
+    so effective batches far beyond device memory produce the identical
+    step.  Both compose: ``mesh`` + ``microbatch_size`` is the shard ×
+    accumulate grid (shards whose local rows already fit the bound
+    accumulate nothing).
     """
     cfg = cfg or ExtensionConfig()
     ext_names = {e.name for e in extensions}
     curv_name = next(
         (n for n in ("kfac", "kflr", "diag_ggn_mc", "diag_ggn", "kfra",
                      "diag_hessian") if n in ext_names), None)
-    splan = None
-    if mesh is not None:
-        splan = eng.plan_sweeps(extensions, cfg).shard(mesh, shard_axes)
 
     def sweep(params, batch, rng):
-        if splan is not None:
-            return splan.run(model, params, batch["inputs"],
-                             batch["labels"], loss, cfg=cfg, rng=rng)
-        return eng.run(model, params, batch["inputs"], batch["labels"], loss,
-                       extensions=extensions, cfg=cfg, rng=rng)
+        n = jax.tree.leaves(batch["inputs"])[0].shape[0]
+        plan = eng.plan_for_batch(extensions, cfg, n, mesh=mesh,
+                                  shard_axes=shard_axes)
+        return plan.run(model, params, batch["inputs"], batch["labels"],
+                        loss, cfg=cfg, rng=rng)
 
     def step(params, opt_state, batch, step_idx, rng):
         res = sweep(params, batch, rng)

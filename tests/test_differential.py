@@ -147,3 +147,83 @@ def test_sharded_sweep_matches_single_device(names, sharded_setup):
                 np.testing.assert_allclose(
                     np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5,
                     err_msg=f"sharded {name} under {cfg}")
+
+
+# ---------------------------------------------------------------------------
+# streaming accumulated lane: the same invariant across microbatches
+# ---------------------------------------------------------------------------
+
+# BatchDot ('gram') and KFRA ('pmean') have no sequential accumulator —
+# their reducers need the whole batch at once; AccumulatedSweepPlan rejects
+# them by design (tests/test_accumulated_sweep.py pins the error).  Every
+# other extension must accumulate exactly.
+_NO_SEQ = {"batch_dot", "kfra"}
+ACC_SUBSETS = []
+for s in SUBSETS:
+    t = tuple(n for n in s if n not in _NO_SEQ)
+    if t and t not in ACC_SUBSETS:
+        ACC_SUBSETS.append(t)
+
+
+def _assert_results_match(res, ref, label):
+    np.testing.assert_allclose(np.asarray(res.loss), np.asarray(ref.loss),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(res.logits),
+                               np.asarray(ref.logits), rtol=1e-5, atol=1e-6)
+    for a, b in zip(_leaves(res.grads), _leaves(ref.grads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    assert set(res.ext) == set(ref.ext), label
+    for name in ref.ext:
+        ra, rb = _leaves(ref.ext[name]), _leaves(res.ext[name])
+        assert len(ra) == len(rb) and ra, (name, label)
+        for a, b in zip(ra, rb):
+            assert a.shape == b.shape, (name, label)
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5,
+                err_msg=f"{label} {name}")
+
+
+@pytest.mark.parametrize("names", ACC_SUBSETS,
+                         ids=["+".join(s) for s in ACC_SUBSETS])
+def test_accumulated_sweep_matches_monolithic(names, setup):
+    """``plan.accumulate(k)`` == the monolithic sweep for every extension
+    subset and every ``use_kernels × use_fused`` configuration.  N=5 makes
+    both tested schedules exercise an *uneven* final microbatch (k=2 →
+    slices of 3+2; k=3 → 2+2+1), and the fixed rng pins the MC draws: the
+    per-global-sample-index PRNG streams must make the sliced draws
+    reproduce the monolithic ones exactly."""
+    model, params, x, y = setup
+    exts = tuple(by_name(n) for n in names)
+    rng = jax.random.PRNGKey(42)
+    for cfg in CONFIGS:
+        ref = run(model, params, x, y, LOSS, extensions=exts, cfg=cfg,
+                  rng=rng)
+        for k in (2, 3):
+            res = plan_sweeps(exts, cfg).accumulate(k).run(
+                model, params, x, y, LOSS, cfg=cfg, rng=rng)
+            _assert_results_match(res, ref, f"accumulate({k}) under {cfg}")
+
+
+@pytest.mark.parametrize("names", ACC_SUBSETS,
+                         ids=["+".join(s) for s in ACC_SUBSETS])
+def test_shard_accumulate_grid_matches_single_device(names, sharded_setup):
+    """The shard × accumulate grid: ``plan.shard(mesh).accumulate(k)`` ==
+    the monolithic single-device sweep.  Each device scans over k=2
+    slices of its local rows — on the 8-virtual-device CI lane that is a
+    genuine 16-sample → 8 shards × 2 microbatches grid.  Both kernel
+    routings run (the fused Pallas path and the pure-jnp reference); the
+    per-extension legacy kernel path and uneven local schedules are
+    pinned by the single-axis lanes above and
+    tests/test_accumulated_sweep.py — re-crossing them here would triple
+    a trace-bound test for paths the grid does not change.
+    """
+    model, params, x, y, mesh = sharded_setup
+    exts = tuple(by_name(n) for n in names)
+    rng = jax.random.PRNGKey(42)
+    for cfg in (REFERENCE, ExtensionConfig(use_kernels=True, use_fused=True)):
+        ref = run(model, params, x, y, LOSS, extensions=exts, cfg=cfg,
+                  rng=rng)
+        res = plan_sweeps(exts, cfg).shard(mesh, "data").accumulate(2).run(
+            model, params, x, y, LOSS, cfg=cfg, rng=rng)
+        _assert_results_match(res, ref, f"shard+accumulate(2) under {cfg}")

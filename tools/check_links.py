@@ -1,0 +1,106 @@
+"""Relative-link checker for the docs site and README.
+
+Scans markdown files for inline links/images, resolves relative targets
+against each file's directory, and fails on targets that do not exist —
+including ``#anchor`` fragments, which are checked against the target
+file's heading slugs (external ``http(s)``/``mailto`` links are skipped:
+CI must not depend on the network).  This is the offline half of the docs
+CI lane; ``mkdocs build --strict`` covers nav and cross-page rendering.
+
+Usage::
+
+    python tools/check_links.py docs README.md
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+# inline markdown links/images: [text](target) / ![alt](target); stops at
+# the first unescaped ')' — none of our targets contain parentheses.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def slugify(heading: str) -> str:
+    """Approximate the mkdocs/GitHub heading-anchor slug."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\s-]", "", h)
+    return re.sub(r"[\s]+", "-", h).strip("-")
+
+
+def heading_slugs(path: str) -> set:
+    slugs = set()
+    with open(path, encoding="utf-8") as f:
+        in_code = False
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+                continue
+            if in_code:
+                continue
+            m = _HEADING.match(line)
+            if m:
+                slugs.add(slugify(m.group(1)))
+    return slugs
+
+
+def md_files(paths):
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, files in os.walk(p):
+                for f in sorted(files):
+                    if f.endswith(".md"):
+                        yield os.path.join(root, f)
+        else:
+            yield p
+
+
+def check_file(path: str) -> list:
+    """Return a list of '(path) target: reason' failure strings."""
+    failures = []
+    base = os.path.dirname(path)
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # drop fenced code blocks — example links in tutorials are not claims
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in _LINK.findall(text):
+        if target.startswith(_EXTERNAL):
+            continue
+        target, _, anchor = target.partition("#")
+        dest = path if not target else os.path.normpath(
+            os.path.join(base, target))
+        if target and not os.path.exists(dest):
+            failures.append(f"{path}: broken link -> {target}")
+            continue
+        if anchor and dest.endswith(".md"):
+            if slugify(anchor) not in heading_slugs(dest):
+                failures.append(
+                    f"{path}: broken anchor -> {target}#{anchor}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+",
+                    help="markdown files and/or directories to scan")
+    args = ap.parse_args(argv)
+    failures, checked = [], 0
+    for path in md_files(args.paths):
+        checked += 1
+        failures.extend(check_file(path))
+    for f in failures:
+        print(f"FAIL {f}")
+    if failures:
+        print(f"link check: {len(failures)} failure(s) "
+              f"across {checked} file(s)")
+        return 1
+    print(f"link check: {checked} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
