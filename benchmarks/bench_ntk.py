@@ -1,0 +1,127 @@
+"""Empirical NTK sweep: fused cross-block kernel vs einsum, streamed vs
+monolithic (ISSUE 6 tentpole).
+
+Two claims to hold:
+
+* the fused Pallas path (within-block ``dot`` accumulator + the
+  ``cross_dot`` cross-block kernel) forms the per-parameter Gram blocks
+  without materializing ``[N, a, b]`` per-sample Jacobian stacks — timed
+  against the pure-jnp einsum baseline that does;
+* the streamed row-block lane (``plan.accumulate(k)``: diagonal blocks
+  from the main scan + one pair pass per slice pair) reproduces the
+  monolithic sweep at bounded per-slice memory and tolerable overhead.
+
+Lanes per shape (N, D, H, C), extensions {ntk, ntk_classwise}:
+
+  ntk/fused/mono            monolithic fused sweep (the 1× baseline)
+  ntk/fused/k4              plan.accumulate(4) — same numbers, streamed
+  ntk/fused/cross_dot       the raw cross-block kernel, standalone
+  ntk/baseline/jnp_mono     monolithic einsum path (ungated)
+  ntk/baseline/cross_einsum the cross-block einsum the kernel replaces
+                            (ungated)
+
+``derived`` carries the ratio vs ntk/fused/mono (kernel lanes: vs their
+einsum counterpart).  The fused lanes are gated by
+``benchmarks/check_regression.py`` against ``BENCH_smoke_ntk.json`` like
+every other fused claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, quick_mode, time_group
+from repro.core import (
+    Activation,
+    CrossEntropyLoss,
+    Dense,
+    ExtensionConfig,
+    Sequential,
+    by_name,
+    ntk_total,
+    plan_sweeps,
+    run,
+)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+# (N, D, H, C): batch, input dim, hidden, classes
+SHAPES = [(128, 64, 128, 16)]
+QUICK_SHAPES = [(24, 16, 32, 6)]
+
+EXT_NAMES = ("ntk", "ntk_classwise")
+
+
+def _make(n, d, h, c, seed=0):
+    model = Sequential([Dense(d, h), Activation("tanh"), Dense(h, c)])
+    params = model.init(jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, d))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 2), (n,), 0, c)
+    return model, params, x, y
+
+
+def _sweep_fn(model, plan_or_none, exts, cfg, loss):
+    if plan_or_none is None:
+        def mono(params, x, y):
+            res = run(model, params, x, y, loss, extensions=exts, cfg=cfg)
+            return ntk_total(res.ext["ntk"])
+
+        return jax.jit(mono)
+
+    def acc(params, x, y):
+        res = plan_or_none.run(model, params, x, y, loss, cfg=cfg)
+        return ntk_total(res.ext["ntk"])
+
+    return jax.jit(acc)
+
+
+def _cross_block_lanes(n, c, h, tag):
+    """The off-diagonal primitive standalone: [E, N1, R, a/b] factor
+    blocks → [E, N1, N2] cross Gram, kernel vs the einsum it replaces."""
+    half = n // 2
+    rng = jax.random.PRNGKey(9)
+    ka, kb, kc, kd = jax.random.split(rng, 4)
+    A1 = jax.random.normal(ka, (c, half, 1, h), jnp.float32)
+    B1 = jax.random.normal(kb, (c, half, 1, c), jnp.float32)
+    A2 = jax.random.normal(kc, (c, n - half, 1, h), jnp.float32)
+    B2 = jax.random.normal(kd, (c, n - half, 1, c), jnp.float32)
+    kern = jax.jit(lambda: kops.cross_dot(A1, B1, A2, B2))
+    ein = jax.jit(lambda: kref.cross_dot(A1, B1, A2, B2))
+    times = time_group({f"ntk/fused/cross_dot/{tag}": kern,
+                        f"ntk/baseline/cross_einsum/{tag}": ein})
+    base = times[f"ntk/baseline/cross_einsum/{tag}"]
+    for name, us in times.items():
+        emit(name, us, f"x{us / base:.2f}_vs_einsum")
+
+
+def main():
+    shapes = QUICK_SHAPES if quick_mode() else SHAPES
+    loss = CrossEntropyLoss()
+    exts = tuple(by_name(nm) for nm in EXT_NAMES)
+    for (n, d, h, c) in shapes:
+        model, params, x, y = _make(n, d, h, c)
+        fused = ExtensionConfig(use_kernels=True)
+        naive = ExtensionConfig(use_kernels=False)
+        tag = f"N{n}_d{d}_h{h}_c{c}"
+
+        lanes = {
+            "ntk/fused/mono":
+                _sweep_fn(model, None, exts, fused, loss),
+            "ntk/fused/k4":
+                _sweep_fn(model, plan_sweeps(exts, fused).accumulate(4),
+                          exts, fused, loss),
+            "ntk/baseline/jnp_mono":
+                _sweep_fn(model, None, exts, naive, loss),
+        }
+        thunks = {name: (lambda f=f: f(params, x, y))
+                  for name, f in lanes.items()}
+        times = time_group(thunks)
+        base = times["ntk/fused/mono"]
+        for name, us in times.items():
+            emit(f"{name}/{tag}", us, f"x{us / base:.2f}_vs_mono")
+
+        _cross_block_lanes(n, c, h, tag)
+
+
+if __name__ == "__main__":
+    main()

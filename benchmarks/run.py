@@ -16,6 +16,8 @@ smaller shapes where a benchmark defines them (currently ``fused``).
   fused     fused first-order kernel vs per-extension    (ISSUE 1 tentpole)
   accumulate  streaming accumulated sweep vs monolithic,
             incl. a beyond-memory-scale batch lane       (ISSUE 5 tentpole)
+  ntk       empirical NTK sweep: fused cross-block
+            kernel vs einsum, streamed vs monolithic     (ISSUE 6 tentpole)
   laplace   posterior fit + fused predictive-variance
             kernel vs naive Jacobian baseline; also
             refreshes BENCH_laplace.json (repo root, or
@@ -64,6 +66,7 @@ def main() -> None:
         bench_individual,
         bench_kernels,
         bench_laplace,
+        bench_ntk,
         bench_optimizers,
         bench_overhead,
         bench_roofline,
@@ -78,6 +81,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "fused": bench_fused_first_order.main,
         "accumulate": bench_accumulate.main,
+        "ntk": bench_ntk.main,
         "laplace": bench_laplace.main,
         "roofline": bench_roofline.main,
     }

@@ -8,11 +8,14 @@ Public API::
         CrossEntropyLoss, MSELoss,
         BatchGrad, BatchL2, SecondMoment, Variance,
         DiagGGN, DiagGGNMC, DiagHessian, KFAC, KFLR, KFRA,
+        NTK, NTKClasswise, ntk_total,
+        Reducer, register_reducer, resolve_reducer,
         ExtensionConfig, run,
     )
 """
 from .extensions import (
     ALL_EXTENSIONS,
+    NTK,
     BatchDot,
     BatchGrad,
     BatchL2,
@@ -27,12 +30,26 @@ from .extensions import (
     KFAC,
     KFLR,
     KFRA,
+    NTKClasswise,
     SecondMoment,
     Variance,
     by_name,
     first_order_mask,
     reduce_spec,
     second_order_mask,
+)
+from . import reducers
+from .reducers import (
+    CONCAT,
+    GRAM,
+    KRON,
+    MOMENT_MERGE,
+    PMEAN,
+    PSUM,
+    REDUCERS,
+    Reducer,
+    register_reducer,
+    resolve_reducer,
 )
 from .loss_hessian import CrossEntropyLoss, MSELoss
 from .module import (
@@ -60,6 +77,7 @@ from .engine import (
     ShardedSweepPlan,
     SweepPlan,
     loss_and_grad,
+    ntk_total,
     plan_for_batch,
     plan_sweeps,
     run,

@@ -61,6 +61,14 @@ from .extensions import (
     sweeps_needed,
 )
 from .module import Module
+from .reducers import (
+    PSUM,
+    GramReducer,
+    Reducer,
+    _chan_merge,
+    merge_stat_trees as _merge_stat_trees,
+)
+from ..sharding.rules import GRAM_ASSEMBLY_MODES, gram_assembly_spec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,7 +100,8 @@ class SweepPlan:
 
     def describe(self) -> str:
         passes = 1 + sum(s in self.sweeps
-                         for s in ("ggn_exact", "ggn_mc", "kfra", "hess"))
+                         for s in ("ggn_exact", "ggn_mc", "jac", "kfra",
+                                   "hess"))
         fused = [k for k in ("l2", "moment", "dot")
                  if getattr(self.fused_mask, k)]
         lane = fused if self.fused_active and fused else None
@@ -128,7 +137,8 @@ class SweepPlan:
         return tuple(out)
 
 
-    def shard(self, mesh, axes=("data",)) -> "ShardedSweepPlan":
+    def shard(self, mesh, axes=("data",),
+              gram_assembly: str = "split") -> "ShardedSweepPlan":
         """Bind this plan to a device mesh: the batch-sharded sweep lane.
 
         ``axes`` names the mesh axis (or axes) the batch is split over;
@@ -136,10 +146,19 @@ class SweepPlan:
         ``shard_map`` — fused kernels on each shard's local batch, then
         the per-extension ``reduce`` specs combine the shards (see
         ``ShardedSweepPlan.describe()`` for the placement report).
+
+        ``gram_assembly`` picks the distributed layout of pairwise (Gram /
+        empirical NTK) outputs: ``'split'`` leaves each shard its row
+        block (sharded axis 0, no extra communication), ``'all'``
+        all-gathers the full [N, N] matrix onto every shard, ``'master'``
+        materializes it on the first shard only (the others hold zeros
+        under a leading device axis).
         """
         if isinstance(axes, str):
             axes = (axes,)
-        return ShardedSweepPlan(plan=self, mesh=mesh, axes=tuple(axes))
+        gram_assembly_spec(gram_assembly, axes)  # validate the mode early
+        return ShardedSweepPlan(plan=self, mesh=mesh, axes=tuple(axes),
+                                gram_assembly=gram_assembly)
 
     def accumulate(self, num_microbatches: int) -> "AccumulatedSweepPlan":
         """Bind this plan to a microbatch schedule: the streaming lane.
@@ -247,20 +266,6 @@ class Results:
 
     def __getitem__(self, k):
         return self.ext[k]
-
-
-def _merge_stat_trees(model_stats, key):
-    """Extract ``stats[key]`` sub-tree from the nested per-module stats."""
-
-    def rec(node):
-        if isinstance(node, dict):
-            # module-level stats dict keyed by extension name
-            return node.get(key, ())
-        if isinstance(node, (tuple, list)):
-            return tuple(rec(c) for c in node)
-        return ()
-
-    return rec(model_stats)
 
 
 def _tree_add(a, b):
@@ -415,17 +420,6 @@ def _default_rng(sweeps, cfg, rng):
     return jax.random.PRNGKey(0)  # unused without an MC sweep
 
 
-def _chan_merge(a, b):
-    """Merge two (count, mean, M2) triples — Chan et al.'s pairwise update."""
-    na, ma, m2a = a
-    nb, mb, m2b = b
-    n = na + nb
-    d = mb - ma
-    mean = ma + d * (nb / n)
-    m2 = m2a + m2b + d * d * (na * nb / n)
-    return n, mean, m2
-
-
 def _moment_triple(sum_g2, grad_sum, n):
     """(count, mean, M2) triple from a partial batch's (Σg², Σg)."""
     nl = jnp.float32(n)
@@ -463,69 +457,54 @@ def _sharded_variance(sum_g2, grad_local, n_local, axes):
     return n * m2
 
 
-def _kron_map(fn, tree, *rest):
-    """Walk Kronecker stats trees applying ``fn(kind, leaf, *others)`` —
-    ``kind`` is ``'A'`` for A/``A_diag`` factors, ``'B'`` for B factors,
-    ``None`` for stray array leaves.  Extra trees walk in lockstep (the
-    accumulator's (new, acc) pairs).  The one factor-key dispatch table
-    keeps the sharded reducer, the sequential accumulator and its
-    finalizer from drifting apart."""
-
-    def rec(node, *others):
-        if isinstance(node, dict):
-            out = {}
-            for k, v in node.items():
-                o = tuple(d[k] for d in others)
-                if k in ("A", "A_diag"):
-                    out[k] = jax.tree.map(partial(fn, "A"), v, *o)
-                elif k == "B":
-                    out[k] = jax.tree.map(partial(fn, "B"), v, *o)
-                else:
-                    out[k] = rec(v, *o)
-            return out
-        if isinstance(node, (tuple, list)):
-            return tuple(rec(*z) for z in zip(node, *others))
-        if hasattr(node, "ndim"):
-            return fn(None, node, *others)
-        return node
-
-    return rec(tree, *rest)
-
-
-def _kron_reduce(tree, axes):
-    """Kronecker-factor reducer: A factors are batch *means* (pmean), B
-    factors batch sums (psum); Embedding's diagonal ``A_diag`` reduces
-    like ``A``."""
-
-    def red(kind, x):
-        if kind == "A":
-            return jax.lax.pmean(x, axes)
-        if kind == "B":
-            return jax.lax.psum(x, axes)
-        return x
-
-    return _kron_map(red, tree)
-
-
 def _reduce_sharded(grads, ext, extensions, axes):
     """Apply each extension's declared cross-shard reducer (inside
-    shard_map).  'concat'/'gram' stats stay shard-local — the sharded
-    out-specs concatenate their sample rows — and 'moment_merge' outputs
-    are already global (see :func:`_sharded_variance`)."""
+    shard_map) — one :meth:`Reducer.shard_reduce` call per extension;
+    gradients are always psum'd.  Local-row reducers (concat / gram) are
+    identity here: the sharded out-specs concatenate their sample rows,
+    and moment-merge outputs are already global (see
+    :func:`_sharded_variance`)."""
     red = reduce_spec(extensions)
-    out = {}
-    for name, tree in ext.items():
-        kind = red.get(name, "psum")
-        if kind == "psum":
-            out[name] = jax.tree.map(lambda x: jax.lax.psum(x, axes), tree)
-        elif kind == "pmean":
-            out[name] = jax.tree.map(lambda x: jax.lax.pmean(x, axes), tree)
-        elif kind == "kron":
-            out[name] = _kron_reduce(tree, axes)
-        else:
-            out[name] = tree
+    out = {name: red.get(name, PSUM).shard_reduce(tree, axes)
+           for name, tree in ext.items()}
     grads = jax.tree.map(lambda x: jax.lax.psum(x, axes), grads)
     return grads, out
+
+
+def _assemble_gram(tree, mode, axes):
+    """Distributed assembly of a pairwise row-block tree inside shard_map.
+
+    ``'split'`` keeps each shard's row block (sharded axis 0 — the
+    default, zero extra communication).  ``'all'`` all-gathers the row
+    blocks so every shard holds the full [N, N, ...] matrix.
+    ``'master'`` gathers too but zeros every shard except linear shard 0,
+    under a fresh leading device axis: stacked by the sharded out-spec,
+    ``out[0]`` is the full matrix and the other entries are zeros (the
+    asdfghjkl-style master layout, without broadcasting the O(N²) result
+    back to every host).
+    """
+    if mode == "split":
+        return tree
+
+    def asm(x):
+        full = jax.lax.all_gather(x, tuple(axes), axis=0, tiled=True)
+        if mode == "all":
+            return full
+        idx = 0
+        for ax in axes:
+            idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+        return jnp.where(idx == 0, full, jnp.zeros_like(full))[None]
+
+    return jax.tree.map(asm, tree)
+
+
+def _assemble_pairwise_ext(ext, red, mode, axes):
+    """Apply :func:`_assemble_gram` to every pairwise extension entry."""
+    if mode == "split":
+        return ext
+    return {nm: (_assemble_gram(t, mode, axes)
+                 if red.get(nm, PSUM).pairwise else t)
+            for nm, t in ext.items()}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -546,9 +525,7 @@ class ShardedSweepPlan:
     plan: SweepPlan
     mesh: Any
     axes: tuple
-
-    # reducers whose outputs keep shard-local sample rows (sharded axis 0)
-    _LOCAL_ROWS = ("concat", "gram")
+    gram_assembly: str = "split"
 
     @property
     def n_shards(self) -> int:
@@ -570,10 +547,10 @@ class ShardedSweepPlan:
 
     def describe(self) -> str:
         red = self.reduce_specs()
+        _, gram_place = gram_assembly_spec(self.gram_assembly, self.axes)
         placement = ", ".join(
-            f"{n}:{k}->" +
-            ("sharded(axis0)" if k in self._LOCAL_ROWS else "replicated")
-            for n, k in sorted(red.items()))
+            f"{n}:{r.name}->" + (gram_place if r.pairwise else r.placement)
+            for n, r in sorted(red.items()))
         mesh_shape = dict(zip(self.mesh.axis_names,
                               self.mesh.devices.shape))
         return (f"{self.plan.describe()} | shard_axes={list(self.axes)} "
@@ -594,13 +571,19 @@ class ShardedSweepPlan:
 
         batch = P(tuple(self.axes))
         red = self.reduce_specs()
-        ext_specs = {name: (batch if red[name] in self._LOCAL_ROWS else P())
-                     for name in self.plan.names}
+        gram_spec, _ = gram_assembly_spec(self.gram_assembly, self.axes)
+        ext_specs = {}
+        for name in self.plan.names:
+            r = red[name]
+            ext_specs[name] = (gram_spec if r.pairwise
+                               else batch if r.local_rows else P())
 
         def body(p, x, y, key):
             res = run(model, p, x, y, loss, extensions=extensions, cfg=cfg,
                       rng=key)
-            return res.loss, res.grads, res.logits, res.ext
+            ext = _assemble_pairwise_ext(res.ext, red, self.gram_assembly,
+                                         self.axes)
+            return res.loss, res.grads, res.logits, ext
 
         fn = _shard_map(body, mesh=self.mesh,
                         in_specs=(P(), batch, batch, P()),
@@ -623,101 +606,42 @@ class ShardedSweepPlan:
 # streaming accumulated sweep lane (SweepPlan.accumulate)
 # ---------------------------------------------------------------------------
 
-# Reduce kinds that admit a *sequential* accumulator — the reinterpretation
-# of each extension's cross-shard ``reduce`` spec along the time axis.
-# 'gram' (BatchDot) and 'pmean' (KFRA) are absent on purpose: the Gram row
-# blocks need every other microbatch's factors in memory, and the Ḡ
-# recursion needs the global batch expectation at every layer — neither
-# exists once the batch is streamed.
-_SEQ_ACCUMULATORS = {
-    "psum": "running sum",
-    "concat": "row append",
-    "kron": "weighted A mean + B sum",
-    "moment_merge": "sequential Chan merge",
-}
-
-
-def _is_moment_triple(x) -> bool:
-    return isinstance(x, dict) and set(x) == {"n", "mean", "m2"}
-
-
-def _merge_moment_triples(acc, new):
-    """Fold one microbatch's (count, mean, M2) triples into the running
-    ones — the sequential counterpart of the sharded binary merge tree."""
-
-    def merge(a, b):
-        n, mean, m2 = _chan_merge((a["n"], a["mean"], a["m2"]),
-                                  (b["n"], b["mean"], b["m2"]))
-        return {"n": n, "mean": mean, "m2": m2}
-
-    return jax.tree.map(merge, acc, new, is_leaf=_is_moment_triple)
-
-
-def _finalize_moment_triples(tree):
-    """n·M2 — the engine's ``n·Σg² − (Σg)²`` variance convention."""
-    return jax.tree.map(lambda t: t["n"] * t["m2"], tree,
-                        is_leaf=_is_moment_triple)
-
-
-def _kron_accum(acc, new, w):
-    """Running Kronecker-factor accumulator: A factors are batch *means*,
-    so each microbatch contributes weighted by its raw sample count ``w``
-    (finalized by :func:`_kron_finalize`'s divide by the total); B factors
-    are batch sums and accumulate directly.  Shares :func:`_kron_map`'s
-    factor-key dispatch with the sharded reducer."""
-
-    def step(kind, n_leaf, a_leaf):
-        if kind == "A":
-            return a_leaf + w * n_leaf
-        return a_leaf + n_leaf
-
-    return _kron_map(step, new, acc)
-
-
-def _kron_finalize(tree, n_total):
-    """Turn accumulated weighted A sums back into batch means."""
-    return _kron_map(
-        lambda kind, x: x / n_total if kind == "A" else x, tree)
-
-
-def _accum_merge_ext(red, acc, new, w):
-    """One sequential accumulation step over the extension dict."""
-    out = {}
-    for name, tree in new.items():
-        kind = red.get(name, "psum")
-        if kind == "kron":
-            out[name] = _kron_accum(acc[name], tree, w)
-        elif kind == "moment_merge":
-            out[name] = _merge_moment_triples(acc[name], tree)
-        else:  # 'psum'
-            out[name] = jax.tree.map(jnp.add, acc[name], tree)
-    return out
-
-
 def _run_accumulated(model, params, inputs, targets, loss, extensions,
-                     cfg, rng, num_microbatches, base_offset=0):
+                     cfg, rng, num_microbatches, base_offset=0, n_shards=1):
     """Sequential microbatch driver: the identical sweep per slice, folded
-    through the extensions' ``reduce`` specs as sequential accumulators.
+    through the extensions' :class:`Reducer` protocols as sequential
+    accumulators (``init`` / ``update`` per slice, ``finalize`` once).
 
     Runs either at top level (single-device accumulated lane) or inside a
     ``shard_map`` shard body (``cfg.shard_axes`` set — the shard ×
-    accumulate grid, where ``inputs`` are this shard's local rows and
-    ``base_offset`` its first global sample index).  ``cfg`` must already
-    carry ``total_units`` / ``total_batch`` / ``accum_stats``.
+    accumulate grid, where ``inputs`` are this shard's local rows,
+    ``base_offset`` its first global sample index and ``n_shards`` the
+    grid width).  ``cfg`` must already carry ``total_units`` /
+    ``total_batch`` / ``accum_stats``.
 
     The batch splits into ``ceil(n / k)``-row slices: every full slice
     runs under one ``lax.scan`` (bounded memory, one trace), an uneven
-    final slice runs as a separate step.  Returns
+    final slice runs as a separate step.  Reducers dispatch by
+    capability: ``streams_rows`` outputs ride the scan stack and
+    concatenate in sample order; ``pairwise`` (Gram / NTK) outputs
+    stream as row blocks — the main scan yields each slice's *diagonal*
+    block, extra pair passes (one per slice pair, also scanned) fill the
+    off-diagonal blocks, and every block is scattered into a zero
+    [n, S·n, ...] accumulator, so peak factor memory stays at two
+    microbatches; everything else folds through ``update``.  Returns
     ``(loss, grads, logits, ext)``.
     """
     red = reduce_spec(extensions)
-    concat_names = [e.name for e in extensions if red[e.name] == "concat"]
-    carry_names = [e.name for e in extensions if red[e.name] != "concat"]
+    pair_names = [e.name for e in extensions if red[e.name].pairwise]
+    concat_names = [e.name for e in extensions if red[e.name].streams_rows]
+    carry_names = [e.name for e in extensions
+                   if not (red[e.name].pairwise or red[e.name].streams_rows)]
     n = jax.tree.leaves(inputs)[0].shape[0]
     k = max(1, min(int(num_microbatches), n))
     m = -(-n // k)          # slice rows (ceil); last slice may be smaller
     k_full = n // m
     rem = n - k_full * m
+    sharded = bool(cfg.shard_axes)
 
     def slice_run(p, key, x_i, y_i, off):
         cfg_i = dataclasses.replace(cfg, sample_offset=off)
@@ -725,7 +649,9 @@ def _run_accumulated(model, params, inputs, targets, loss, extensions,
                   cfg=cfg_i, rng=key)
         carry_ext = {nm: res.ext[nm] for nm in carry_names}
         cat_ext = {nm: res.ext[nm] for nm in concat_names}
-        return res.loss, res.grads, carry_ext, res.logits, cat_ext
+        pair_ext = {nm: res.ext[nm] for nm in pair_names}
+        return (res.loss, res.grads, carry_ext, res.logits, cat_ext,
+                pair_ext)
 
     def head(a):
         return a[:m]
@@ -733,7 +659,21 @@ def _run_accumulated(model, params, inputs, targets, loss, extensions,
     zshape = jax.eval_shape(slice_run, params, rng,
                             jax.tree.map(head, inputs),
                             jax.tree.map(head, targets), 0)
-    zero = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), zshape[:3])
+    zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), zshape[:3])
+    zero = (zeros[0], zeros[1],
+            {nm: red[nm].init(zeros[2][nm]) for nm in carry_names})
+
+    # Pairwise (Gram-family) accumulators: one [n, S, n, ...] buffer per
+    # stat leaf (S = n_shards), scatter-filled block by block and reshaped
+    # to the row-block layout [n, S·n, ...] at the end.  A streamed
+    # block's column axis is already the shard-gathered S·rows, so the
+    # middle shard axis lines the scattered columns up with the
+    # shard-major global sample order.
+    def pair_zero(s):
+        return jnp.zeros((n, n_shards, n) + s.shape[2:], s.dtype)
+
+    pair_acc = {nm: jax.tree.map(pair_zero, zshape[5][nm])
+                for nm in pair_names}
 
     def split(a):
         return a[:k_full * m].reshape((k_full, m) + a.shape[1:])
@@ -743,14 +683,16 @@ def _run_accumulated(model, params, inputs, targets, loss, extensions,
 
     def body(carry, xs_i):
         x_i, y_i, off = xs_i
-        lv, g, cext, z, yext = slice_run(params, rng, x_i, y_i, off)
+        lv, g, cext, z, yext, pext = slice_run(params, rng, x_i, y_i, off)
         a_lv, a_g, a_ext = carry
+        meta = {"weight": float(m)}
         carry = (a_lv + lv, jax.tree.map(jnp.add, a_g, g),
-                 _accum_merge_ext(red, a_ext, cext, float(m)))
-        return carry, (z, yext)
+                 {nm: red[nm].update(a_ext[nm], cext[nm], meta)
+                  for nm in carry_names})
+        return carry, (z, yext, pext)
 
     with jax.named_scope(f"accumscan_T{k_full}"):
-        (lv, grads, c_ext), (zs, ys) = jax.lax.scan(body, zero, xs)
+        (lv, grads, c_ext), (zs, ys, ps) = jax.lax.scan(body, zero, xs)
 
     def unstack(a):
         return a.reshape((k_full * a.shape[1],) + a.shape[2:])
@@ -758,30 +700,123 @@ def _run_accumulated(model, params, inputs, targets, loss, extensions,
     logits = jax.tree.map(unstack, zs)
     cat_ext = {nm: jax.tree.map(unstack, ys[nm]) for nm in concat_names}
 
+    # Diagonal blocks rode the scan stack: block t is rows
+    # [t·m, (t+1)·m) against its own gathered columns.
+    def scatter_diag(acc, blocks):
+        for t in range(k_full):
+            b = blocks[t].reshape((m, n_shards, m) + blocks.shape[3:])
+            acc = acc.at[t * m:(t + 1) * m, :, t * m:(t + 1) * m].set(
+                b.astype(acc.dtype))
+        return acc
+
+    pair_acc = {nm: jax.tree.map(scatter_diag, pair_acc[nm], ps[nm])
+                for nm in pair_names}
+
     if rem:
         def tail(a):
             return a[k_full * m:]
 
-        lv_r, g_r, cext_r, z_r, yext_r = slice_run(
+        lv_r, g_r, cext_r, z_r, yext_r, pext_r = slice_run(
             params, rng, jax.tree.map(tail, inputs),
             jax.tree.map(tail, targets), base_offset + k_full * m)
         lv = lv + lv_r
         grads = jax.tree.map(jnp.add, grads, g_r)
-        c_ext = _accum_merge_ext(red, c_ext, cext_r, float(rem))
+        meta_r = {"weight": float(rem)}
+        c_ext = {nm: red[nm].update(c_ext[nm], cext_r[nm], meta_r)
+                 for nm in carry_names}
         cat = partial(jax.tree.map, lambda a, b: jnp.concatenate([a, b], 0))
         logits = cat(logits, z_r)
         cat_ext = {nm: cat(cat_ext[nm], yext_r[nm]) for nm in concat_names}
 
+        def scatter_rem(acc, blk):
+            b = blk.reshape((rem, n_shards, rem) + blk.shape[2:])
+            o = k_full * m
+            return acc.at[o:o + rem, :, o:o + rem].set(b.astype(acc.dtype))
+
+        pair_acc = {nm: jax.tree.map(scatter_rem, pair_acc[nm], pext_r[nm])
+                    for nm in pair_names}
+
+    # Off-diagonal row blocks: one extra 2-slice sweep per (p, q) pair,
+    # scanned over the pair index.  Single-device, cfg.cross_split makes
+    # the layer hooks emit only the [m, rows_q, ...] cross block (half the
+    # pair-pass FLOPs); sharded, the hooks gather as usual and the cross
+    # blocks are cut out of the gathered columns (the within-pair diagonal
+    # sub-blocks are redundant with the main scan and discarded).
+    if pair_names and (k_full > 1 or (rem and k_full)):
+        pair_exts = tuple(e for e in extensions if e.name in pair_names)
+
+        def pair_run(off_p, off_q, rows_q):
+            def cut(a):
+                ap = jax.lax.dynamic_slice_in_dim(a, off_p, m, 0)
+                aq = jax.lax.dynamic_slice_in_dim(a, off_q, rows_q, 0)
+                return jnp.concatenate([ap, aq], 0)
+
+            cfg_p = dataclasses.replace(
+                cfg, sample_offset=0,
+                cross_split=None if sharded else m)
+            res = run(model, params, jax.tree.map(cut, inputs),
+                      jax.tree.map(cut, targets), loss,
+                      extensions=pair_exts, cfg=cfg_p, rng=rng)
+            return res.ext
+
+        def scatter_pair(acc, blk, off_p, off_q, rows_q):
+            if sharded:
+                b = blk.reshape((m + rows_q, n_shards, m + rows_q)
+                                + blk.shape[2:])
+                top = b[:m, :, m:]             # [m, S, rows_q, ...]
+                bot = b[m:, :, :m]             # [rows_q, S, m, ...]
+            else:
+                top = blk[:, None]
+                bot = GramReducer.transpose_block(blk)[:, None]
+            tail0 = (0,) * (top.ndim - 3)
+            acc = jax.lax.dynamic_update_slice(
+                acc, top.astype(acc.dtype), (off_p, 0, off_q) + tail0)
+            return jax.lax.dynamic_update_slice(
+                acc, bot.astype(acc.dtype), (off_q, 0, off_p) + tail0)
+
+        def pair_step(rows_q):
+            def step(acc_tree, offs):
+                off_p, off_q = offs[0], offs[1]
+                pext = pair_run(off_p, off_q, rows_q)
+                acc_tree = {
+                    nm: jax.tree.map(
+                        lambda a, b: scatter_pair(a, b, off_p, off_q,
+                                                  rows_q),
+                        acc_tree[nm], pext[nm])
+                    for nm in pair_names}
+                return acc_tree, None
+
+            return step
+
+        pairs = [(p * m, q * m)
+                 for p in range(k_full) for q in range(p + 1, k_full)]
+        if pairs:
+            with jax.named_scope(f"gramscan_T{len(pairs)}"):
+                pair_acc, _ = jax.lax.scan(
+                    pair_step(m), pair_acc, jnp.asarray(pairs, jnp.int32))
+        if rem:
+            offs = jnp.stack(
+                [m * jnp.arange(k_full, dtype=jnp.int32),
+                 jnp.full((k_full,), k_full * m, jnp.int32)], axis=1)
+            with jax.named_scope(f"gramscan_rem_T{k_full}"):
+                pair_acc, _ = jax.lax.scan(pair_step(rem), pair_acc, offs)
+
     ext = {}
+    meta_fin = {"total_batch": float(n), "total_units": cfg.total_units}
+    if "kfra" in carry_names:
+        # The reducer accumulates KFRA's global batch expectations
+        # ({'gbar', 'partials'}); replaying the Ḡ recursion through the
+        # layer stack is model structure, so the driver provides it.
+        meta_fin["replay"] = lambda gbar, parts: _merge_stat_trees(
+            model.kfra_apply(params, gbar, parts, extensions, cfg)[1],
+            "kfra")
     for nm in carry_names:
-        kind = red[nm]
-        if kind == "kron":
-            ext[nm] = _kron_finalize(c_ext[nm], float(n))
-        elif kind == "moment_merge":
-            ext[nm] = _finalize_moment_triples(c_ext[nm])
-        else:
-            ext[nm] = c_ext[nm]
+        ext[nm] = red[nm].finalize(c_ext[nm], meta_fin)
     ext.update(cat_ext)
+    for nm in pair_names:
+        ext[nm] = jax.tree.map(
+            lambda a: a.reshape((n, n_shards * n) + a.shape[3:]),
+            pair_acc[nm])
     return lv, grads, logits, ext
 
 
@@ -794,19 +829,23 @@ class AccumulatedSweepPlan:
     ``run`` executes the identical fused-kernel sweep once per microbatch
     slice under a ``lax.scan`` driver and folds results through each
     extension's ``reduce`` spec reinterpreted as a *sequential*
-    accumulator: running sums for ``'psum'``, running sample-count-
-    weighted A / summed B factors for ``'kron'``, in-order row appends
-    for ``'concat'``, and the pairwise Chan moment merge for
-    ``'moment_merge'``.  The loss's 1/M normalization is corrected with
-    the mask-aware *global* unit count (computed once from the full
-    targets), and MC factor draws stay keyed per global sample index —
-    so results match the monolithic sweep up to accumulation order while
-    peak activation/factor memory scales with the microbatch, serving
-    effective batches far beyond device memory.
+    accumulator (``Reducer.init`` / ``update`` / ``finalize``): running
+    sums for psum, running sample-count-weighted A / summed B factors for
+    kron, in-order row appends for concat, the pairwise Chan moment merge
+    for moment_merge, streamed row-block scatters for the pairwise Gram
+    family (BatchDot / NTK — diagonal blocks from the main scan, one
+    extra sweep per slice pair for the off-diagonal blocks), and weighted
+    partial means plus a final chain replay for KFRA's pmean.  The loss's
+    1/M normalization is corrected with the mask-aware *global* unit
+    count (computed once from the full targets), and MC factor draws
+    stay keyed per global sample index — so results match the monolithic
+    sweep up to accumulation order while peak activation/factor memory
+    scales with the microbatch, serving effective batches far beyond
+    device memory.
 
-    Extensions whose reducers need the whole batch at once —
-    ``'gram'`` (BatchDot) and ``'pmean'`` (KFRA) — have no sequential
-    accumulator and are rejected with an actionable error.
+    Third-party reducers that genuinely need the whole batch resident
+    declare ``supports_streaming = False`` and are rejected with an
+    actionable error.
     """
 
     plan: SweepPlan
@@ -823,22 +862,24 @@ class AccumulatedSweepPlan:
 
     def describe(self) -> str:
         base = (self.sharded or self.plan).describe()
-        accs = ", ".join(f"{k}:{v}" for k, v in _SEQ_ACCUMULATORS.items())
+        red = reduce_spec([by_name(nm) for nm in sorted(self.plan.names)])
+        accs = ", ".join(f"{nm}:{r.name}({r.streaming_form})"
+                         for nm, r in sorted(red.items()))
         return (f"{base} | accumulate={self.num_microbatches} microbatches "
                 f"(sequential reduce: {accs})")
 
     def _check_extensions(self, extensions):
         red = reduce_spec(extensions)
-        bad = sorted(nm for nm, kd in red.items()
-                     if kd not in _SEQ_ACCUMULATORS)
+        bad = sorted(nm for nm, r in red.items() if not r.supports_streaming)
         if bad:
+            kinds = ", ".join(f"{nm} ({red[nm].name})" for nm in bad)
             raise ValueError(
-                f"extensions {bad} have no sequential accumulator: their "
-                "reduce specs ('gram'/'pmean') need the whole batch at "
-                "once — BatchDot's Gram blocks pair samples across "
-                "microbatches and KFRA's Ḡ recursion needs the global "
-                "expectation at every layer.  Run them on a monolithic or "
-                "sharded sweep, or drop them from the accumulated plan.")
+                f"extensions [{kinds}] have no sequential accumulator: "
+                "their reducers declare supports_streaming=False — the "
+                "whole batch must be resident at once.  Run them on a "
+                "monolithic or sharded sweep, implement the streaming "
+                "protocol on the reducer, or drop them from the "
+                "accumulated plan.")
         return red
 
     def run(self, model, params, inputs, targets, loss,
@@ -859,7 +900,7 @@ class AccumulatedSweepPlan:
         if self.sharded is None:
             cfg2 = dataclasses.replace(
                 cfg, shard_axes=None, total_units=mg, total_batch=n,
-                accum_stats=True)
+                accum_stats=True, cross_split=None)
             lv, grads, logits, ext = _run_accumulated(
                 model, params, inputs, targets, loss, extensions, cfg2,
                 rng, self.num_microbatches)
@@ -869,17 +910,26 @@ class AccumulatedSweepPlan:
         sp.check_batch(n)
         n_local = n // sp.n_shards
         batch = P(tuple(sp.axes))
-        ext_specs = {nm: (batch if red[nm] == "concat" else P())
-                     for nm in self.plan.names}
+        gram_spec, _ = gram_assembly_spec(sp.gram_assembly, sp.axes)
+        ext_specs = {}
+        for nm in self.plan.names:
+            r = red[nm]
+            ext_specs[nm] = (gram_spec if r.pairwise
+                             else batch if r.streams_rows else P())
         cfg2 = dataclasses.replace(cfg, shard_axes=tuple(sp.axes),
-                                   total_batch=n, accum_stats=True)
+                                   total_batch=n, accum_stats=True,
+                                   cross_split=None)
         k = self.num_microbatches
 
         def body(p, x, y, key, mg_):
             cfg_b = dataclasses.replace(cfg2, total_units=mg_)
             base = _global_sample_offset(sp.axes, n_local)
-            return _run_accumulated(model, p, x, y, loss, extensions,
-                                    cfg_b, key, k, base_offset=base)
+            lv, grads, logits, ext = _run_accumulated(
+                model, p, x, y, loss, extensions, cfg_b, key, k,
+                base_offset=base, n_shards=sp.n_shards)
+            ext = _assemble_pairwise_ext(ext, red, sp.gram_assembly,
+                                         sp.axes)
+            return lv, grads, logits, ext
 
         fn = _shard_map(body, mesh=sp.mesh,
                         in_specs=(P(), batch, batch, P(), P()),
@@ -1068,11 +1118,43 @@ def run(
         if "kfac" in names:
             ext["kfac"] = _combine_kron(curv, kron_a, "kfac")
 
+    # ---- raw-Jacobian sweep (empirical NTK family) --------------------------
+    if "jac" in sweeps:
+        jac_exts = tuple(e for e in extensions if e.sweep == "jac")
+        if z.ndim != 2:
+            raise ValueError(
+                "NTK extensions need flat [N, C] model outputs, got logits "
+                f"of shape {z.shape} — reduce the sequence axis before the "
+                "head or restrict the NTK to a flat-output model")
+        C = z.shape[-1]
+        # Identity cotangents per class: S0[c, n, :] = e_c.  The transposed-
+        # Jacobian sweep then yields raw per-sample Jacobian factors — no
+        # loss curvature, no 1/M scaling, no MC draws.
+        S0 = jnp.broadcast_to(jnp.eye(C, dtype=jnp.float32)[:, None, :],
+                              (C, z.shape[0], C))
+        _, jcurv = model.curv_backward(params, tape, S0, jac_exts, cfg, "ntk")
+        if "ntk" in names:
+            ext["ntk"] = _merge_stat_trees(jcurv, "ntk")
+        if "ntk_classwise" in names:
+            ext["ntk_classwise"] = _merge_stat_trees(jcurv, "ntk_classwise")
+
     # ---- chain-only sweeps ---------------------------------------------------
     if "kfra" in sweeps:
         Gbar = loss.hessian_mean(z, targets)
-        _, kstats = model.kfra_backward(params, tape, Gbar, extensions, cfg)
-        ext["kfra"] = _merge_stat_trees(kstats, "kfra")
+        if cfg.accum_stats:
+            # Accumulation-driver body: emit the streamable halves of the
+            # recursion — the global Ḡ contribution plus the per-layer
+            # batch-expectation partials.  The driver's MeanReducer folds
+            # both across microbatches and replays the chain recursion
+            # once at the end (exact: every batch-dependent quantity in
+            # Eq. 24 is a batch mean).
+            ext["kfra"] = {"gbar": Gbar,
+                           "partials": model.kfra_partials(params, tape,
+                                                           cfg)}
+        else:
+            _, kstats = model.kfra_backward(params, tape, Gbar, extensions,
+                                            cfg)
+            ext["kfra"] = _merge_stat_trees(kstats, "kfra")
 
     if "hess" in sweeps:
         S = loss.sqrt_hessian(z, targets)
@@ -1115,6 +1197,24 @@ def _combine_kron(curv_stats, kron_a_stats, name):
         return b_node
 
     return rec(b_tree, kron_a_stats)
+
+
+def ntk_total(ext_tree):
+    """Sum a per-parameter NTK stats tree into the total kernel.
+
+    ``run(...).ext['ntk']`` mirrors the params structure with one
+    ``[N, N]`` block per parameter leaf (``[N, N, C]`` for
+    ``ntk_classwise``) — the empirical NTK Θ(x, x') = J Jᵀ is their sum.
+    Works on sharded row-block layouts too (the leaves just carry the
+    lane's row/assembly shape).
+    """
+    leaves = jax.tree.leaves(ext_tree)
+    if not leaves:
+        raise ValueError("empty NTK stats tree — was the extension run?")
+    out = leaves[0].astype(jnp.float32)
+    for leaf in leaves[1:]:
+        out = out + leaf.astype(jnp.float32)
+    return out
 
 
 def loss_and_grad(model, params, inputs, targets, loss):

@@ -17,105 +17,116 @@ requested extensions to decide which backward sweeps to run:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Union
+
+from .reducers import (
+    CONCAT,
+    GRAM,
+    KRON,
+    MOMENT_MERGE,
+    PMEAN,
+    PSUM,
+    Reducer,
+    resolve_reducer,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class Extension:
     """One extractable quantity (a row of the paper's Table 1/5).
 
-    An extension is a *pure declaration* — three static strings the engine
-    plans sweeps from.  The declaration is also what the scale-out lanes
-    act on: ``reduce`` names how partial results combine across the batch
-    axis, whether that axis is split over devices
-    (:meth:`~repro.core.engine.SweepPlan.shard`) or over time
-    (:meth:`~repro.core.engine.SweepPlan.accumulate`).
+    An extension is a *pure declaration* the engine plans sweeps from.
+    The declaration is also what the scale-out lanes act on: ``reduce``
+    is the :class:`~repro.core.reducers.Reducer` protocol object saying
+    how partial results combine across the batch axis, whether that axis
+    is split over devices (:meth:`~repro.core.engine.SweepPlan.shard`)
+    or over time (:meth:`~repro.core.engine.SweepPlan.accumulate`) —
+    every lane drives the same object.
 
     Parameters
     ----------
     name : str
         Key of the statistic in ``Results.ext``.
-    sweep : {'first', 'ggn_exact', 'ggn_mc', 'kfra', 'hess'}
+    sweep : {'first', 'ggn_exact', 'ggn_mc', 'jac', 'kfra', 'hess'}
         Which backward sweep produces it.
-    reduce : {'psum', 'concat', 'gram', 'kron', 'pmean', 'moment_merge'}
-        How partial results over a split batch combine:
-
-        ``'psum'``
-            Sum the partial batch reductions (GGN/Hessian diagonals,
-            second moment).  Sharded: ``lax.psum``; accumulated: running
-            sum.
-        ``'concat'``
-            Per-sample rows — each shard/microbatch owns its samples'
-            rows, concatenated in sample order.
-        ``'gram'``
-            Pairwise per-sample stats ([N, N] Gram matrices): each shard
-            computes its row block against the all-gathered factors.
-            *No sequential accumulator* — a streamed microbatch cannot
-            see the other microbatches' factors, so the accumulated lane
-            rejects it.
-        ``'kron'``
-            Kronecker factor pairs (Eq. 23): A factors are batch *means*
-            (sharded: pmean; accumulated: running sample-count-weighted
-            mean), B factors batch sums (psum / running sum).
-        ``'pmean'``
-            Batch-averaged statistics (KFRA's Ḡ recursion, Eq. 24).  The
-            recursion needs the global expectation at *every layer*, so
-            it pmeans inline under sharding and has *no sequential
-            accumulator*.
-        ``'moment_merge'``
-            Mean/variance pairs via the numerically stable pairwise
-            (Chan) moment merge — across shards in a binary tree, across
-            microbatches as a sequential left fold.
+    reduce : Reducer
+        How partial results over a split batch combine — one of the
+        registered protocol instances (``PSUM``, ``CONCAT``, ``GRAM``,
+        ``KRON``, ``PMEAN``, ``MOMENT_MERGE`` from
+        :mod:`repro.core.reducers`) or a custom :class:`Reducer`.  The
+        pre-protocol string names (``reduce='gram'`` etc.) still resolve,
+        with a ``DeprecationWarning`` naming the replacement instance.
     """
 
     name: str
     sweep: str
-    reduce: str = "psum"
+    reduce: Union[Reducer, str] = PSUM
+
+    def __post_init__(self):
+        # Deprecated string aliases resolve to protocol instances at
+        # declaration time (resolve_reducer warns), so the engine only
+        # ever sees Reducer objects.
+        if not isinstance(self.reduce, Reducer):
+            object.__setattr__(self, "reduce", resolve_reducer(self.reduce))
 
 
 # --- first-order extensions (paper §2.2, App. A.1) -------------------------
-BatchGrad = Extension("batch_grad", "first", reduce="concat")
+BatchGrad = Extension("batch_grad", "first", reduce=CONCAT)
 """Per-sample gradients ``[N, *param]`` of the mean loss (paper Eq. 5)."""
 
-BatchL2 = Extension("batch_l2", "first", reduce="concat")
+BatchL2 = Extension("batch_l2", "first", reduce=CONCAT)
 """Per-sample squared gradient norms ``[N]`` via the Gram trick (Eq. 9)."""
 
-BatchDot = Extension("batch_dot", "first", reduce="gram")
+BatchDot = Extension("batch_dot", "first", reduce=GRAM)
 """Pairwise per-sample gradient dots ``[N, N]`` — beyond-paper
 (BackPACK-2.x-style) gradient-similarity / conflict telemetry."""
 
-SecondMoment = Extension("second_moment", "first", reduce="psum")
+SecondMoment = Extension("second_moment", "first", reduce=PSUM)
 """Batch-scaled second moment ``N·Σ_n g_n²`` per parameter (Eq. 10)."""
 
-Variance = Extension("variance", "first", reduce="moment_merge")
+Variance = Extension("variance", "first", reduce=MOMENT_MERGE)
 """Per-parameter gradient variance ``N·Σg² − (Σg)²`` (Eq. 11)."""
 
 # --- second-order extensions (paper §2.3, App. A.2) -------------------------
-DiagGGN = Extension("diag_ggn", "ggn_exact", reduce="psum")
+DiagGGN = Extension("diag_ggn", "ggn_exact", reduce=PSUM)
 """Exact generalized-Gauss-Newton diagonal per parameter (Eq. 19)."""
 
-DiagGGNMC = Extension("diag_ggn_mc", "ggn_mc", reduce="psum")
+DiagGGNMC = Extension("diag_ggn_mc", "ggn_mc", reduce=PSUM)
 """Monte-Carlo GGN diagonal (the Eq. 20 factorization of Eq. 19)."""
 
-KFLR = Extension("kflr", "ggn_exact", reduce="kron")
+KFLR = Extension("kflr", "ggn_exact", reduce=KRON)
 """Kronecker-factored low-rank GGN blocks ``A ⊗ B`` with the exact
 loss-Hessian factor in ``B`` (Eq. 23)."""
 
-KFAC = Extension("kfac", "ggn_mc", reduce="kron")
+KFAC = Extension("kfac", "ggn_mc", reduce=KRON)
 """KFAC blocks — the Eq. 23 Kronecker pair with the MC factor in ``B``."""
 
-KFRA = Extension("kfra", "kfra", reduce="pmean")
+KFRA = Extension("kfra", "kfra", reduce=PMEAN)
 """Kronecker factors from the batch-averaged Ḡ recursion (Eq. 24);
 chain (Sequential-of-Dense/activation) models only."""
 
-DiagHessian = Extension("diag_hessian", "hess", reduce="psum")
+DiagHessian = Extension("diag_hessian", "hess", reduce=PSUM)
 """Exact Hessian diagonal via signed residual factors (Eq. 25/26);
 chain models only."""
 
-GGNTrace = Extension("ggn_trace", "ggn_exact", reduce="concat")
+GGNTrace = Extension("ggn_trace", "ggn_exact", reduce=CONCAT)
 """Per-sample GGN trace ``[N]`` — beyond-paper curvature-concentration
 telemetry (which samples dominate the loss curvature); a marginal-cost
 output of the fused second-order kernel.  Dense-shaped layers only."""
+
+# --- empirical NTK family (beyond-paper; Gram blocks of the Jacobian) -------
+NTK = Extension("ntk", "jac", reduce=GRAM)
+"""Empirical NTK row blocks ``[N, N]`` per layer parameter:
+``Θ[n, m] = Σ_c ⟨J_c(x_n), J_c(x_m)⟩`` from *raw* output Jacobians
+(identity cotangents — no loss weighting), summed over the class axis.
+Vector-output (``z [N, C]``) models; Dense-shaped layers contribute
+(like GGNTrace).  Sum the leaves for the total kernel
+(:func:`repro.core.engine.ntk_total`)."""
+
+NTKClasswise = Extension("ntk_classwise", "jac", reduce=GRAM)
+"""Class-diagonal empirical NTK ``[N, N, C]`` per layer parameter:
+``Θ[n, m, c] = ⟨J_c(x_n), J_c(x_m)⟩`` (asdfghjkl's class-wise kernel,
+sample axes leading so the Gram reducer's row-block layout applies)."""
 
 ALL_EXTENSIONS = (
     BatchGrad,
@@ -130,6 +141,8 @@ ALL_EXTENSIONS = (
     KFRA,
     DiagHessian,
     GGNTrace,
+    NTK,
+    NTKClasswise,
 )
 _BY_NAME = {e.name: e for e in ALL_EXTENSIONS}
 
@@ -143,11 +156,13 @@ def sweeps_needed(extensions) -> set:
 
 
 def reduce_spec(extensions) -> dict:
-    """``{extension name: cross-shard reducer}`` for a set of extensions.
+    """``{extension name: Reducer}`` for a set of extensions.
 
-    The table the batch-sharded sweep lane acts on — see
-    :class:`Extension` for the reducer vocabulary and
-    ``engine.ShardedSweepPlan`` for the implementation.
+    The protocol-object table every scale-out lane drives — see
+    :mod:`repro.core.reducers` for the protocol and
+    ``engine.ShardedSweepPlan`` / ``engine.AccumulatedSweepPlan`` for the
+    drivers.  (Pre-protocol callers compared the values against strings;
+    compare ``reduce_spec(...)[name].name`` instead.)
     """
     return {e.name: e.reduce for e in extensions}
 
@@ -312,3 +327,12 @@ class ExtensionConfig:
     total_batch: Optional[int] = None
     sample_offset: Any = 0
     accum_stats: bool = False
+    # Streaming-Gram pair passes (single-device): the batch the hooks see
+    # is the concatenation of two microbatch slices, and pairwise stats
+    # (batch_dot / ntk*) should emit ONLY the cross block rows[:cross_split]
+    # × rows[cross_split:] — computed through the fused cross-block kernel
+    # (``kernels.ops.cross_dot``) when kernels are on.  Ignored under
+    # ``shard_axes`` (sharded pairwise stats compute full gathered-column
+    # rows; the driver slices the blocks).  Set by the accumulated
+    # driver's pair passes; never set this by hand.
+    cross_split: Optional[int] = None

@@ -115,32 +115,42 @@ def per_sample_sq_sum(A, B, chunk=8, use_kernels=False):
     return out
 
 
-def _pairwise_rows(ps, shard_axes=None):
-    """Gram rows G Gᵀ for per-sample rows ``ps`` [N, ...] → [N, M] float32.
+def _pairwise_rows(ps, shard_axes=None, cross_split=None):
+    """Gram rows G Gᵀ for per-sample rows ``ps`` [N, ...] → [rows, M] f32.
 
-    Single device: M == N (the full pairwise matrix).  Under a
+    Single device: rows == M == N (the full pairwise matrix).  Under a
     batch-sharded sweep (``shard_axes`` set, inside ``shard_map``) each
     shard computes its *row block* against the all-gathered rows
     (M == global N); the sharded out-spec concatenates the blocks back
     into the exact full matrix — pairwise stats are the one statistic a
-    shard cannot finish from local samples alone.
+    shard cannot finish from local samples alone.  With ``cross_split``
+    (the streaming-Gram pair passes; mutually exclusive with
+    ``shard_axes``) the batch is a concatenated microbatch pair and only
+    the cross block ``rows[:cs] @ rows[cs:].T`` is emitted.
     """
     f = _f32(ps).reshape(ps.shape[0], -1)
+    if cross_split is not None:
+        return f[:cross_split] @ f[cross_split:].T
     cols = (jax.lax.all_gather(f, shard_axes, axis=0, tiled=True)
             if shard_axes else f)
     return f @ cols.T
 
 
-def per_sample_dots(A, B, shard_axes=None):
+def per_sample_dots(A, B, shard_axes=None, cross_split=None):
     """D[n,m] = ⟨g_n, g_m⟩ for g = A_nᵀB_n — pairwise Gram trick.
 
-    A: [N, R, a], B: [N, R, b] → [N, M] float32; M == N single-device,
-    global N under a sharded sweep (row block vs the all-gathered
-    factors — gathering (A, B) costs activation-sized traffic instead of
-    the [N, a, b] per-sample gradients).  diag of the assembled matrix ==
-    batch_l2.
+    A: [N, R, a], B: [N, R, b] → [rows, M] float32; rows == M == N
+    single-device, global N columns under a sharded sweep (row block vs
+    the all-gathered factors — gathering (A, B) costs activation-sized
+    traffic instead of the [N, a, b] per-sample gradients), and the
+    ``[cs, N - cs]`` cross block under ``cross_split`` (the streaming
+    pair passes).  diag of the assembled matrix == batch_l2.
     """
     A, B = _f32(A), _f32(B)
+    if cross_split is not None:
+        ga = jnp.einsum("nra,msa->nmrs", A[:cross_split], A[cross_split:])
+        gb = jnp.einsum("nrb,msb->nmrs", B[:cross_split], B[cross_split:])
+        return jnp.sum(ga * gb, axis=(2, 3))
     Am, Bm = A, B
     if shard_axes:
         Am = jax.lax.all_gather(A, shard_axes, axis=0, tiled=True)
@@ -148,6 +158,16 @@ def per_sample_dots(A, B, shard_axes=None):
     ga = jnp.einsum("nra,msa->nmrs", A, Am)
     gb = jnp.einsum("nrb,msb->nmrs", B, Bm)
     return jnp.sum(ga * gb, axis=(2, 3))
+
+
+def _pair_split(cfg):
+    """(shard_axes, cross_split) a pairwise stat hook should honour:
+    cross blocks are a single-device streaming construct — under a
+    sharded sweep the gathered-column row block already carries every
+    pair and the driver slices it (see ``engine._run_accumulated``)."""
+    axes = getattr(cfg, "shard_axes", None)
+    cs = None if axes else getattr(cfg, "cross_split", None)
+    return axes, cs
 
 
 def per_sample_l2(A, B, use_kernels=False):
@@ -185,7 +205,7 @@ def dense_first_order_stats(A, B, exts, cfg: ExtensionConfig, bias: bool):
     mask = first_order_mask(names)
     out = {}
     Af, Bf = _f32(A), _f32(B)
-    axes = getattr(cfg, "shard_axes", None)
+    axes, cross = _pair_split(cfg)
     # For R==1 every statistic has a cheaper rank-1 specialization than a
     # fused launch that materializes G[n]=a_n b_nᵀ: l2 is Σa²·Σb²
     # (O(N(a+b))), dot is (AAᵀ)∘(BBᵀ) (O(N²(a+b))), and the moment is the
@@ -194,10 +214,13 @@ def dense_first_order_stats(A, B, exts, cfg: ExtensionConfig, bias: bool):
     # Under a sharded sweep the pairwise dot needs the *cross-shard* Gram
     # blocks, which the shard-local fused kernel cannot see — dot drops
     # out of the launch mask and runs through the gathered Gram einsum
-    # (l2/moment stay fused: they are per-sample/batch-sum local).
+    # (l2/moment stay fused: they are per-sample/batch-sum local).  The
+    # streaming pair passes (``cross`` set) likewise bypass the fused
+    # launch: only the off-diagonal block is wanted, which the dedicated
+    # cross_dot kernel computes without the two diagonal blocks.
     rank1 = A.shape[1] == 1
     kmask = FusedMask() if rank1 else (
-        dataclasses.replace(mask, dot=False) if axes else mask)
+        dataclasses.replace(mask, dot=False) if (axes or cross) else mask)
     fused = None
     if cfg.use_kernels and cfg.use_fused and kmask.any():
         from repro.kernels import ops as kops
@@ -226,20 +249,94 @@ def dense_first_order_stats(A, B, exts, cfg: ExtensionConfig, bias: bool):
         else:
             out["batch_l2"] = {"w": l2w}
     if mask.dot:
-        # Non-fused fallback is the pure-jnp Gram einsum: no standalone dot
-        # kernel ever existed, so that IS the per-extension baseline (and
-        # for R==1 it reduces to the cheap (AAᵀ)∘(BBᵀ) form).
-        dw = (fused["dot"] if fused is not None and kmask.dot
-              else per_sample_dots(A, B, shard_axes=axes))
+        if fused is not None and kmask.dot:
+            dw = fused["dot"]
+        elif cross is not None and rank1:
+            # Rank-1 cross block: (A1 A2ᵀ) ∘ (B1 B2ᵀ), O(m²(a+b)).
+            dw = ((Af[:cross, 0] @ Af[cross:, 0].T)
+                  * (Bf[:cross, 0] @ Bf[cross:, 0].T))
+        elif cross is not None and cfg.use_kernels:
+            from repro.kernels import ops as kops
+
+            dw = kops.cross_dot(Af[:cross], Bf[:cross],
+                                Af[cross:], Bf[cross:])
+        else:
+            # Non-fused fallback is the pure-jnp Gram einsum: no standalone
+            # dot kernel ever existed, so that IS the per-extension baseline
+            # (and for R==1 it reduces to the cheap (AAᵀ)∘(BBᵀ) form).
+            dw = per_sample_dots(A, B, shard_axes=axes, cross_split=cross)
         if bias:
             bsum = jnp.sum(Bf, axis=1)
-            out["batch_dot"] = {"w": dw, "b": _pairwise_rows(bsum, axes)}
+            out["batch_dot"] = {"w": dw,
+                                "b": _pairwise_rows(bsum, axes, cross)}
         else:
             out["batch_dot"] = {"w": dw}
     if "kfac" in names or "kflr" in names:
         n, r, _ = A.shape
         a_fac = jnp.einsum("nra,nrc->ac", Af, Af) / float(n * r)
         out["_kron_a"] = {"w": a_fac}
+    return out
+
+
+def _dense_ntk_stats(A, S, names, cfg: ExtensionConfig, bias: bool):
+    """Empirical-NTK row blocks for y = x @ W (+ b) from raw-Jacobian
+    factors.
+
+    A: [N, R, a] inputs, S: [C, N, R, b] identity-cotangent factors (the
+    raw output Jacobian backpropagated to this layer — no loss weighting).
+    The per-class per-sample weight Jacobian is G[c,n] = A_nᵀ S[c,n]; the
+    class-diagonal kernel block
+
+        T[c, n, m] = ⟨G[c,n], G[c,m]⟩ = Σ_{r,s} (A_n·A_m)(S_cn·S_cm)
+
+    is emitted as [N, M, C] (``ntk_classwise``; sample axes leading so the
+    Gram reducer's row-block algebra applies) or class-summed [N, M]
+    (``ntk``).  Column semantics mirror :func:`per_sample_dots`: M == N
+    single-device, global N under a sharded sweep (row block vs the
+    all-gathered factors), the ``[cs, N - cs]`` cross block under
+    ``cross_split`` (the streaming pair passes).  The fused path batches
+    the class axis through one ``cross_dot`` launch (E = C); rank-1
+    layers take the closed form (A₁A₂ᵀ) ∘ per-class (S₁S₂ᵀ).
+    """
+    out = {}
+    Af, Sf = _f32(A), _f32(S)
+    axes, cross = _pair_split(cfg)
+    rank1 = A.shape[1] == 1
+    A1 = A2 = Af
+    S1 = S2 = Sf
+    if axes:
+        A2 = jax.lax.all_gather(Af, axes, axis=0, tiled=True)
+        S2 = jax.lax.all_gather(Sf, axes, axis=1, tiled=True)
+    elif cross is not None:
+        A1, A2 = Af[:cross], Af[cross:]
+        S1, S2 = Sf[:, :cross], Sf[:, cross:]
+    if rank1:
+        KA = A1[:, 0] @ A2[:, 0].T                            # [N, M]
+        KS = jnp.einsum("cnb,cmb->cnm", S1[:, :, 0], S2[:, :, 0])
+        T = KA[None] * KS                                     # [C, N, M]
+    elif cfg.use_kernels and cfg.use_fused:
+        from repro.kernels import ops as kops
+
+        c = S1.shape[0]
+        T = kops.cross_dot(jnp.broadcast_to(A1[None], (c,) + A1.shape), S1,
+                           jnp.broadcast_to(A2[None], (c,) + A2.shape), S2)
+    else:
+        ga = jnp.einsum("nra,msa->nmrs", A1, A2)
+        gs = jnp.einsum("cnrb,cmsb->cnmrs", S1, S2)
+        T = jnp.einsum("nmrs,cnmrs->cnm", ga, gs)
+    if bias:
+        Sb1 = jnp.sum(S1, axis=2)                             # [C, N, b]
+        Sb2 = jnp.sum(S2, axis=2)
+    if "ntk" in names:
+        d = {"w": jnp.sum(T, axis=0)}
+        if bias:
+            d["b"] = jnp.einsum("cnb,cmb->nm", Sb1, Sb2)
+        out["ntk"] = d
+    if "ntk_classwise" in names:
+        d = {"w": jnp.moveaxis(T, 0, -1)}
+        if bias:
+            d["b"] = jnp.einsum("cnb,cmb->nmc", Sb1, Sb2)
+        out["ntk_classwise"] = d
     return out
 
 
@@ -266,6 +363,10 @@ def dense_curv_stats(A, S, exts, cfg: ExtensionConfig, bias: bool, ext_prefix):
     axis C̃ simply stands in for the class axis.
     """
     names = {e.name for e in exts}
+    if ext_prefix == "ntk":
+        # The raw-Jacobian ('jac') sweep lands here with identity
+        # cotangents: pairwise kernel blocks instead of curvature sums.
+        return _dense_ntk_stats(A, S, names, cfg, bias)
     out = {}
     c, n, r, b = S.shape
     Af, Sf = _f32(A), _f32(S)
@@ -380,9 +481,9 @@ class Module:
                 lambda a: jnp.sum(_f32(a).reshape(a.shape[0], -1) ** 2, -1), pg
             )
         if "batch_dot" in names:
-            axes = getattr(cfg, "shard_axes", None)
+            axes, cross = _pair_split(cfg)
             out["batch_dot"] = jax.tree.map(
-                lambda a: _pairwise_rows(a, axes), pg
+                lambda a: _pairwise_rows(a, axes, cross), pg
             )
         return out
 
@@ -398,6 +499,30 @@ class Module:
 
     # -- chain-only sweeps ----------------------------------------------------
     def kfra_backward(self, params, tape, Gbar, exts, cfg):
+        raise UnsupportedSweep(f"KFRA unsupported for {type(self).__name__}")
+
+    def kfra_partials(self, params, tape, cfg):
+        """Batch-mean chain partials of the Ḡ recursion (streaming KFRA).
+
+        Everything batch-dependent in Eq. 24 is a batch expectation — the
+        Dense A factor, the activation's E_n[f'f'ᵀ] mask outer.  The
+        accumulated lane streams these raw means microbatch by microbatch
+        (sample-count-weighted, see ``reducers.MeanReducer``) and replays
+        the batch-independent chain on the accumulated *global* means via
+        :meth:`kfra_apply` — exact, because the recursion is linear in
+        each partial.
+        """
+        raise UnsupportedSweep(f"KFRA unsupported for {type(self).__name__}")
+
+    def kfra_apply(self, params, Gbar, partials, exts, cfg):
+        """Replay one Ḡ recursion step from accumulated chain partials.
+
+        Returns ``(Gbar_in, stats)`` exactly like :meth:`kfra_backward`,
+        but every batch expectation is read from ``partials`` (a
+        :meth:`kfra_partials` tree, already globally averaged) instead of
+        the tape — ``kfra_backward(tape) ==
+        kfra_apply(kfra_partials(tape))`` by construction.
+        """
         raise UnsupportedSweep(f"KFRA unsupported for {type(self).__name__}")
 
     def hess_backward(self, params, tape, g, factors, exts, cfg):
@@ -495,14 +620,20 @@ class Dense(Module):
         return self.jac_t_mat(params, tape, S), stats
 
     def kfra_backward(self, params, tape, Gbar, exts, cfg):
-        x = tape
-        A = _nra(x)
+        return self.kfra_apply(params, Gbar,
+                               self.kfra_partials(params, tape, cfg),
+                               exts, cfg)
+
+    def kfra_partials(self, params, tape, cfg):
+        A = _nra(tape)
         n, r, _ = A.shape
+        return {"a": jnp.einsum("nra,nrc->ac", _f32(A), _f32(A))
+                / float(n * r)}
+
+    def kfra_apply(self, params, Gbar, partials, exts, cfg):
         stats = {}
-        names = {e.name for e in exts}
-        if "kfra" in names:
-            a_fac = jnp.einsum("nra,nrc->ac", _f32(A), _f32(A)) / float(n * r)
-            d = {"w": {"A": a_fac, "B": Gbar}}
+        if "kfra" in {e.name for e in exts}:
+            d = {"w": {"A": partials["a"], "B": Gbar}}
             if self.use_bias:
                 d["b"] = {"B": Gbar}
             stats["kfra"] = d
@@ -582,8 +713,7 @@ class Embedding(Module):
             if "batch_l2" in names:
                 stats["batch_l2"] = {"w": jnp.sum(pg * pg, axis=(1, 2))}
             if "batch_dot" in names:
-                stats["batch_dot"] = {
-                    "w": _pairwise_rows(pg, getattr(cfg, "shard_axes", None))}
+                stats["batch_dot"] = {"w": _pairwise_rows(pg, *_pair_split(cfg))}
         if "kfac" in names or "kflr" in names:
             counts = jnp.zeros((self.vocab,), jnp.float32).at[tok.reshape(-1)].add(1.0)
             stats["_kron_a"] = {"w": counts / float(tok.size)}  # diagonal A
@@ -663,7 +793,7 @@ class RMSNorm(Module):
             stats["batch_l2"] = {"g": jnp.sum(per_sample ** 2, -1)}
         if "batch_dot" in names:
             stats["batch_dot"] = {"g": _pairwise_rows(
-                per_sample, getattr(cfg, "shard_axes", None))}
+                per_sample, *_pair_split(cfg))}
         return g_in, grads, stats
 
     def jac_t_mat(self, params, tape, M):
@@ -727,7 +857,7 @@ class GroupRMSNorm(RMSNorm):
             stats["batch_l2"] = {"g": jnp.sum(per_sample ** 2, -1)}
         if "batch_dot" in names:
             stats["batch_dot"] = {"g": _pairwise_rows(
-                per_sample, getattr(cfg, "shard_axes", None))}
+                per_sample, *_pair_split(cfg))}
         return g_in, grads, stats
 
     def jac_t_mat(self, params, tape, M):
@@ -783,9 +913,9 @@ class LayerNorm(Module):
         if "batch_l2" in names:
             stats["batch_l2"] = {"g": jnp.sum(per_g ** 2, -1), "b": jnp.sum(per_b ** 2, -1)}
         if "batch_dot" in names:
-            axes = getattr(cfg, "shard_axes", None)
-            stats["batch_dot"] = {"g": _pairwise_rows(per_g, axes),
-                                  "b": _pairwise_rows(per_b, axes)}
+            axes, cross = _pair_split(cfg)
+            stats["batch_dot"] = {"g": _pairwise_rows(per_g, axes, cross),
+                                  "b": _pairwise_rows(per_b, axes, cross)}
         return gx, gp, stats
 
     def curv_backward(self, params, tape, S, exts, cfg, ext_prefix):
@@ -854,18 +984,27 @@ class Activation(Module):
         return self.jac_t_mat(params, tape, S), {}
 
     def kfra_backward(self, params, tape, Gbar, exts, cfg):
+        return self.kfra_apply(params, Gbar,
+                               self.kfra_partials(params, tape, cfg),
+                               exts, cfg)
+
+    def kfra_partials(self, params, tape, cfg):
         d1 = self.d1(_f32(tape)).reshape(tape.shape[0], -1, tape.shape[-1])
-        # Ḡ_in = Ḡ ∘ E_n[f'_n f'_nᵀ]   (diagonal per-sample Jacobians)
         n, r, h = d1.shape
+        # E_n[f'_n f'_nᵀ] (diagonal per-sample Jacobians).  The Ḡ
+        # recursion needs the expectation over the *global* batch at every
+        # step — a local mean would compound shard bias layer by layer, so
+        # under a sharded sweep the expectation is pmean'd here, in-line,
+        # not post-hoc.
         outer = jnp.einsum("nri,nrj->ij", d1, d1) / float(n * r)
-        # The Ḡ recursion needs the expectation over the *global* batch at
-        # every step — a local mean would compound shard bias layer by
-        # layer, so under a sharded sweep the expectation is pmean'd here,
-        # in-line, not post-hoc.
         axes = getattr(cfg, "shard_axes", None)
         if axes:
             outer = jax.lax.pmean(outer, axes)
-        return Gbar * outer, {}
+        return {"m": outer}
+
+    def kfra_apply(self, params, Gbar, partials, exts, cfg):
+        # Ḡ_in = Ḡ ∘ E_n[f'_n f'_nᵀ]
+        return Gbar * partials["m"], {}
 
     def hess_backward(self, params, tape, g, factors, exts, cfg):
         x = _f32(tape)
@@ -943,6 +1082,18 @@ class Sequential(Module):
         for i in reversed(range(len(self.mods))):
             Gbar, stats[i] = self.mods[i].kfra_backward(
                 params[i], tape[i], Gbar, exts, cfg
+            )
+        return Gbar, tuple(stats)
+
+    def kfra_partials(self, params, tape, cfg):
+        return tuple(m.kfra_partials(p, t, cfg)
+                     for m, p, t in zip(self.mods, params, tape))
+
+    def kfra_apply(self, params, Gbar, partials, exts, cfg):
+        stats = [None] * len(self.mods)
+        for i in reversed(range(len(self.mods))):
+            Gbar, stats[i] = self.mods[i].kfra_apply(
+                params[i], Gbar, partials[i], exts, cfg
             )
         return Gbar, tuple(stats)
 

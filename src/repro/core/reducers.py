@@ -1,0 +1,419 @@
+"""First-class Reducer protocol — how partial extension results combine.
+
+Historically ``Extension.reduce`` was a closed string vocabulary
+(``'psum' / 'concat' / 'gram' / 'kron' / 'pmean' / 'moment_merge'``)
+interpreted independently by three engine drivers (the shard_map reducer,
+the lax.scan sequential accumulator, and the shard × accumulate grid).
+This module replaces the strings with protocol *objects*: one
+:class:`Reducer` instance per combination rule, driven uniformly by every
+lane.  String names keep working as deprecated aliases (resolved — with a
+``DeprecationWarning`` — by :func:`resolve_reducer`).
+
+The protocol
+------------
+
+Spatial (cross-shard) reduction::
+
+    shard_reduce(tree, axes)   # inside shard_map; collectives or identity
+
+Sequential (cross-microbatch) accumulation — a weighted left fold::
+
+    acc = reducer.init(zero_tree)
+    acc = reducer.update(acc, partial, meta)   # meta = {'weight': n_mb, ...}
+    out = reducer.finalize(acc, meta)          # meta carries total counts
+
+``merge(a, b)`` combines two *accumulated* partials; it must be
+associative (and, unless ``commutative`` is False, order-invariant) —
+tests/test_reducers.py asserts both properties for every registered
+reducer with hypothesis.
+
+Capability flags (what the drivers dispatch on, instead of string
+switches):
+
+``supports_streaming``
+    The accumulated lane can fold this reducer sequentially.  Third-party
+    reducers that genuinely need the whole batch resident set this False
+    and get the capability error from ``AccumulatedSweepPlan`` for free.
+``local_rows``
+    Sharded outputs keep shard-local sample rows (axis 0); the sharded
+    out-specs concatenate them (``'concat'`` rows, ``'gram'`` row blocks).
+``streams_rows``
+    The accumulated lane appends this reducer's rows microbatch by
+    microbatch (the ``'concat'`` fast path) instead of carrying a
+    running accumulator.
+``pairwise``
+    Gram-family: entries pair samples *across* microbatches, so the
+    streaming driver runs extra row-block pair passes and scatters the
+    emitted blocks (see ``engine._run_accumulated``).  The streaming
+    algebra is block-scatter-into-zeros + elementwise add — associative
+    and commutative because blocks are disjoint.
+"""
+from __future__ import annotations
+
+import warnings
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# shared tree helpers (also used by the engine drivers)
+# ---------------------------------------------------------------------------
+
+
+def merge_stat_trees(model_stats, key):
+    """Extract ``stats[key]`` sub-tree from the nested per-module stats."""
+
+    def rec(node):
+        if isinstance(node, dict):
+            # module-level stats dict keyed by extension name
+            return node.get(key, ())
+        if isinstance(node, (tuple, list)):
+            return tuple(rec(c) for c in node)
+        return ()
+
+    return rec(model_stats)
+
+
+def _tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _tree_axpy(w, x, y):
+    """y + w·x leaf-wise (the weighted running-mean accumulator step)."""
+    return jax.tree.map(lambda xl, yl: yl + w * xl, x, y)
+
+
+def _chan_merge(a, b):
+    """Merge two (count, mean, M2) triples — Chan et al.'s pairwise update."""
+    na, ma, m2a = a
+    nb, mb, m2b = b
+    n = na + nb
+    d = mb - ma
+    mean = ma + d * (nb / n)
+    m2 = m2a + m2b + d * d * (na * nb / n)
+    return n, mean, m2
+
+
+def _is_moment_triple(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"n", "mean", "m2"}
+
+
+def _merge_moment_triples(acc, new):
+    """Fold one partial batch's (count, mean, M2) triples into the running
+    ones — the sequential counterpart of the sharded binary merge tree."""
+
+    def merge(a, b):
+        n, mean, m2 = _chan_merge((a["n"], a["mean"], a["m2"]),
+                                  (b["n"], b["mean"], b["m2"]))
+        return {"n": n, "mean": mean, "m2": m2}
+
+    return jax.tree.map(merge, acc, new, is_leaf=_is_moment_triple)
+
+
+def _finalize_moment_triples(tree):
+    """n·M2 — the engine's ``n·Σg² − (Σg)²`` variance convention."""
+    return jax.tree.map(lambda t: t["n"] * t["m2"], tree,
+                        is_leaf=_is_moment_triple)
+
+
+def _kron_map(fn, tree, *rest):
+    """Walk Kronecker stats trees applying ``fn(kind, leaf, *others)`` —
+    ``kind`` is ``'A'`` for A/``A_diag`` factors, ``'B'`` for B factors,
+    ``None`` for stray array leaves.  Extra trees walk in lockstep (the
+    accumulator's (new, acc) pairs).  The one factor-key dispatch table
+    keeps the sharded reducer, the sequential accumulator and its
+    finalizer from drifting apart."""
+
+    def rec(node, *others):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                o = tuple(d[k] for d in others)
+                if k in ("A", "A_diag"):
+                    out[k] = jax.tree.map(partial(fn, "A"), v, *o)
+                elif k == "B":
+                    out[k] = jax.tree.map(partial(fn, "B"), v, *o)
+                else:
+                    out[k] = rec(v, *o)
+            return out
+        if isinstance(node, (tuple, list)):
+            return tuple(rec(*z) for z in zip(node, *others))
+        if hasattr(node, "ndim"):
+            return fn(None, node, *others)
+        return node
+
+    return rec(tree, *rest)
+
+
+def _is_kfra_partial(x) -> bool:
+    """Marker for the streaming-KFRA raw emission: the global-mean loss
+    Hessian contribution plus the per-layer chain partials (see
+    ``Module.kfra_partials``)."""
+    return isinstance(x, dict) and set(x) == {"gbar", "partials"}
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+
+class Reducer:
+    """How one extension's partial results combine across a split batch.
+
+    Base class = the ``'psum'`` behaviour (sum of partial batch
+    reductions); subclasses override the pieces that differ.  Instances
+    are stateless singletons — declare them on :class:`Extension` and the
+    engine's three drivers (shard / accumulate / grid) call the protocol
+    methods instead of switching on strings.
+    """
+
+    name = "psum"
+    supports_streaming = True
+    local_rows = False
+    streams_rows = False
+    pairwise = False
+    commutative = True
+    streaming_form = "running sum"
+
+    # -- spatial (cross-shard) ---------------------------------------------
+    def shard_reduce(self, tree, axes):
+        return jax.tree.map(lambda x: jax.lax.psum(x, axes), tree)
+
+    @property
+    def placement(self) -> str:
+        """Where sharded outputs live: shard-local sample rows
+        (concatenated by the out-specs) or replicated reductions."""
+        return "sharded(axis0)" if self.local_rows else "replicated"
+
+    # -- sequential (cross-microbatch) -------------------------------------
+    def init(self, zero):
+        """Initial accumulator from a zeros-like of one partial emission."""
+        return zero
+
+    def update(self, acc, new, meta: Dict[str, Any]):
+        """Fold one microbatch's raw emission into the accumulator.
+        ``meta['weight']`` is the microbatch's raw sample count."""
+        return _tree_add(acc, new)
+
+    def merge(self, a, b):
+        """Combine two accumulated partials (associative; commutative
+        unless ``commutative`` is False)."""
+        return _tree_add(a, b)
+
+    def finalize(self, acc, meta: Dict[str, Any]):
+        """Accumulated partials → the monolithic statistic.  ``meta``
+        carries ``total_batch`` / ``total_units`` (and, for reducers that
+        replay model structure, driver-provided callbacks)."""
+        return acc
+
+
+class PsumReducer(Reducer):
+    """Sum of partial batch reductions (GGN/Hessian diagonals, moments)."""
+
+
+class ConcatReducer(Reducer):
+    """Per-sample rows: each shard/microbatch owns its samples' rows,
+    concatenated in sample order (hence not commutative)."""
+
+    name = "concat"
+    local_rows = True
+    streams_rows = True
+    commutative = False
+    streaming_form = "row append"
+
+    def shard_reduce(self, tree, axes):
+        return tree  # sharded out-specs concatenate the local rows
+
+    def update(self, acc, new, meta):
+        return self.merge(acc, new)
+
+    def merge(self, a, b):
+        return jax.tree.map(lambda x, y: jnp.concatenate([x, y], 0), a, b)
+
+
+class GramReducer(Reducer):
+    """Pairwise per-sample statistics ([N, N] Gram row blocks).
+
+    Sharded: each shard computes its *row block* against the all-gathered
+    factors; rows stay shard-local (the out-specs concatenate them), with
+    the distributed assembly modes (``'split' | 'all' | 'master'``) applied
+    by the shard lane on top.
+
+    Streamed: the main microbatch scan emits *diagonal* blocks in place;
+    off-diagonal blocks come from one extra sweep per (micro)batch pair,
+    and every block is scattered into a zero [N, N] accumulator — so the
+    streaming algebra is an elementwise add of disjoint-block matrices
+    (associative, commutative), and peak factor memory stays at two
+    microbatches.
+    """
+
+    name = "gram"
+    local_rows = True
+    pairwise = True
+    streaming_form = "row-block scatter (diag in-place, pairs streamed)"
+
+    def shard_reduce(self, tree, axes):
+        return tree
+
+    @staticmethod
+    def transpose_block(x):
+        """Off-diagonal block (p, q) → its mirror (q, p): pairwise stats
+        are symmetric in the sample axes (the leading two; trailing axes —
+        e.g. the class axis of ``ntk_classwise`` — ride along)."""
+        return jnp.swapaxes(x, 0, 1)
+
+
+class KronReducer(Reducer):
+    """Kronecker factor pairs: A factors are batch *means* (sharded:
+    pmean; streamed: running sample-count-weighted mean), B factors batch
+    sums (psum / running sum)."""
+
+    name = "kron"
+    streaming_form = "weighted A mean + B sum"
+
+    def shard_reduce(self, tree, axes):
+        def red(kind, x):
+            if kind == "A":
+                return jax.lax.pmean(x, axes)
+            if kind == "B":
+                return jax.lax.psum(x, axes)
+            return x
+
+        return _kron_map(red, tree)
+
+    def update(self, acc, new, meta):
+        w = meta["weight"]
+
+        def step(kind, n_leaf, a_leaf):
+            if kind == "A":
+                return a_leaf + w * n_leaf
+            return a_leaf + n_leaf
+
+        return _kron_map(step, new, acc)
+
+    def merge(self, a, b):
+        return _kron_map(lambda kind, x, y: x + y, a, b)
+
+    def finalize(self, acc, meta):
+        n_total = meta["total_batch"]
+        return _kron_map(
+            lambda kind, x: x / n_total if kind == "A" else x, acc)
+
+
+class MomentMergeReducer(Reducer):
+    """Mean/variance via the numerically stable pairwise (Chan) moment
+    merge — across shards in a binary tree (already applied inside the
+    shard body, see ``engine._sharded_moment_triple``), across
+    microbatches as a sequential fold of (count, mean, M2) triples."""
+
+    name = "moment_merge"
+    streaming_form = "sequential Chan merge"
+
+    def shard_reduce(self, tree, axes):
+        return tree  # triples are merged across shards in the body
+
+    def update(self, acc, new, meta):
+        return self.merge(acc, new)
+
+    def merge(self, a, b):
+        return _merge_moment_triples(a, b)
+
+    def finalize(self, acc, meta):
+        return _finalize_moment_triples(acc)
+
+
+class MeanReducer(Reducer):
+    """Batch-averaged statistics (``'pmean'``): sharded via
+    ``lax.pmean``, streamed as a sample-count-weighted running mean.
+
+    KFRA rides on this reducer with one extra wrinkle: its Ḡ recursion
+    needs the *global* batch expectation at every layer, so the streamed
+    emission is a ``{'gbar', 'partials'}`` pair — the loss-Hessian mean
+    *contribution* (sums across microbatches) plus per-layer expectation
+    partials (weighted means) — and ``finalize`` replays the chain
+    recursion on the accumulated global expectations via the
+    driver-provided ``meta['replay']`` callback (exact: every
+    batch-dependent quantity in the recursion is a batch mean).
+    """
+
+    name = "pmean"
+    streaming_form = "weighted partial means (+ chain replay for KFRA)"
+
+    def shard_reduce(self, tree, axes):
+        return jax.tree.map(lambda x: jax.lax.pmean(x, axes), tree)
+
+    def update(self, acc, new, meta):
+        w = meta["weight"]
+        if _is_kfra_partial(new):
+            return {"gbar": _tree_add(acc["gbar"], new["gbar"]),
+                    "partials": _tree_axpy(w, new["partials"],
+                                           acc["partials"])}
+        return _tree_axpy(w, new, acc)
+
+    def merge(self, a, b):
+        return _tree_add(a, b)
+
+    def finalize(self, acc, meta):
+        n_total = meta["total_batch"]
+        if _is_kfra_partial(acc):
+            partials = jax.tree.map(lambda x: x / n_total, acc["partials"])
+            return meta["replay"](acc["gbar"], partials)
+        return jax.tree.map(lambda x: x / n_total, acc)
+
+
+# ---------------------------------------------------------------------------
+# registry + deprecated string aliases
+# ---------------------------------------------------------------------------
+
+PSUM = PsumReducer()
+CONCAT = ConcatReducer()
+GRAM = GramReducer()
+KRON = KronReducer()
+MOMENT_MERGE = MomentMergeReducer()
+PMEAN = MeanReducer()
+
+REDUCERS: Dict[str, Reducer] = {}
+
+
+def register_reducer(reducer: Reducer) -> Reducer:
+    """Add a reducer to the registry (enumerated by the protocol
+    conformance tests; resolved by the deprecated string alias path)."""
+    REDUCERS[reducer.name] = reducer
+    return reducer
+
+
+for _r in (PSUM, CONCAT, GRAM, KRON, MOMENT_MERGE, PMEAN):
+    register_reducer(_r)
+
+
+_ALIAS_REPLACEMENT = {
+    "psum": "repro.core.reducers.PSUM",
+    "concat": "repro.core.reducers.CONCAT",
+    "gram": "repro.core.reducers.GRAM",
+    "kron": "repro.core.reducers.KRON",
+    "moment_merge": "repro.core.reducers.MOMENT_MERGE",
+    "pmean": "repro.core.reducers.PMEAN",
+}
+
+
+def resolve_reducer(spec) -> Reducer:
+    """Reducer instance for ``spec`` — a :class:`Reducer` passes through;
+    a registered string name resolves as a *deprecated* alias."""
+    if isinstance(spec, Reducer):
+        return spec
+    if isinstance(spec, str):
+        if spec not in REDUCERS:
+            raise ValueError(
+                f"unknown reducer {spec!r}: registered reducers are "
+                f"{sorted(REDUCERS)} (register_reducer adds new ones)")
+        warnings.warn(
+            f"string reduce specs are deprecated: reduce={spec!r} — "
+            f"declare the Reducer instance instead "
+            f"({_ALIAS_REPLACEMENT.get(spec, f'repro.core.reducers.REDUCERS[{spec!r}]')})",
+            DeprecationWarning, stacklevel=3)
+        return REDUCERS[spec]
+    raise TypeError(f"reduce spec must be a Reducer or a registered "
+                    f"string name, got {type(spec).__name__}")

@@ -61,6 +61,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.batch_l2 import batch_l2_pallas
+from repro.kernels.cross_dot import cross_dot_pallas
 from repro.kernels.fused_first_order import fused_first_order_pallas
 from repro.kernels.fused_second_order import fused_second_order_pallas
 from repro.kernels.ggn_diag import ggn_diag_pallas
@@ -336,6 +337,35 @@ def _fused_first_order(A, B, *, want_l2=True, want_moment=False,
     return out
 
 
+@register("cross_dot", ref=ref.cross_dot)
+def _cross_dot(A1, B1, A2, B2, *, block_a=None, block_b=None,
+               interpret=True):
+    """Cross-block pairwise dots: out[e,n,m] = ⟨A1ᵀB1[n], A2ᵀB2[m]⟩.
+
+    A1/B1: [E, N1, R, a/b], A2/B2: [E, N2, R, a/b] → [E, N1, N2] float32
+    — the off-diagonal Gram / empirical-NTK row-block tile.  Zero-padding
+    N1, N2 and R is exact (padded per-sample gradients are zero and
+    contribute nothing to any dot); padded output rows/cols are sliced
+    off.
+    """
+    e, n1, r, a = A1.shape
+    n2 = A2.shape[1]
+    b = B1.shape[-1]
+    cap = 512 if interpret else 128
+    ba = (_clamp_block(block_a, a) if block_a is not None
+          else _auto_block(a, cap))
+    bb = (_clamp_block(block_b, b) if block_b is not None
+          else _auto_block(b, cap))
+
+    def prep(x, blk):
+        return _pad_to(_pad_to(_pad_to(x, 3, blk), 2, 8), 1, 8)
+
+    out = cross_dot_pallas(prep(A1, ba), prep(B1, bb),
+                           prep(A2, ba), prep(B2, bb),
+                           block_a=ba, block_b=bb, interpret=interpret)
+    return out[:, :n1, :n2]
+
+
 @register("fused_second_order", ref=ref.fused_second_order)
 def _fused_second_order(A, S, *, want_diag=True, want_kron=False,
                         want_trace=False, block_a=None, block_b=None,
@@ -469,3 +499,15 @@ def fused_first_order(A, B, want_l2=True, want_moment=False, want_dot=False,
     if squeeze:
         out = {k: v[0] for k, v in out.items()}
     return out
+
+
+def cross_dot(A1, B1, A2, B2, block_a=None, block_b=None):
+    """Cross-block pairwise dots [E, N1, N2] (Gram / NTK row-block tile);
+    inputs may be [N, R, a] (a leading group axis of 1 is added and the
+    output squeezed to [N1, N2]) or [E, N, R, a]."""
+    squeeze = A1.ndim == 3
+    if squeeze:
+        A1, B1, A2, B2 = A1[None], B1[None], A2[None], B2[None]
+    out = dispatch("cross_dot", A1, B1, A2, B2,
+                   block_a=block_a, block_b=block_b)
+    return out[0] if squeeze else out

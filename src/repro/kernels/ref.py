@@ -40,6 +40,21 @@ def batch_dot(A, B):
     return jnp.sum(ga * gb, axis=(2, 3))
 
 
+def cross_dot(A1, B1, A2, B2):
+    """out[e,n,m] = ⟨G1[e,n], G2[e,m]⟩ for G = A_nᵀB_n — cross-block Gram.
+
+    The row-block × row-block generalization of :func:`batch_dot`: two
+    different row sets (a microbatch pair's off-diagonal Gram block, or an
+    NTK row block against gathered columns), a leading group axis E
+    (classes for the class-diagonal empirical NTK).
+    """
+    g1 = jnp.einsum("enra,enrb->enab", A1.astype(jnp.float32),
+                    B1.astype(jnp.float32))
+    g2 = jnp.einsum("emra,emrb->emab", A2.astype(jnp.float32),
+                    B2.astype(jnp.float32))
+    return jnp.einsum("enab,emab->enm", g1, g2)
+
+
 def fused_second_order(A, S, want_diag=True, want_kron=False,
                        want_trace=False):
     """Oracle for the fused curvature kernel: t[c,n] = A_nᵀ S_cn, reduce.

@@ -1,7 +1,9 @@
 from repro.sharding.rules import (
+    GRAM_ASSEMBLY_MODES,
     RULES,
     Rules,
     batch_axes,
+    gram_assembly_spec,
     input_shardings,
     partition_specs,
     rules_for,

@@ -57,6 +57,40 @@ def batch_axes(multi_pod: bool):
     return ("pod", "data") if multi_pod else ("data",)
 
 
+# --- distributed Gram/NTK assembly modes (asdfghjkl-style gather modes) -----
+
+# How the sharded sweep lanes assemble pairwise (Gram-reduced) statistics —
+# [N, N] gradient/NTK row blocks — across the data shards:
+#
+#   'split'   each shard keeps its row block; the sharded out-specs
+#             concatenate them, so the logical [N, N] result is physically
+#             row-sharded over the data axes (the default: no extra
+#             traffic, kernel-regression solvers shard rows anyway).
+#   'all'     every shard all-gathers the row blocks in-body; the result
+#             is the full [N, N] matrix, replicated.
+#   'master'  one full copy on the first shard only (torch.distributed's
+#             gather-to-rank-0): the body emits a leading device axis —
+#             result [S, N, N] sharded over it, ``[0]`` is the master
+#             copy, the other slots are zeros.
+GRAM_ASSEMBLY_MODES = ("split", "all", "master")
+
+
+def gram_assembly_spec(mode: str, axes):
+    """``(out PartitionSpec, placement description)`` for a pairwise
+    statistic under assembly ``mode`` over mesh ``axes`` — the one table
+    both sharded sweep lanes (plain and shard × accumulate) derive their
+    Gram out-specs from."""
+    if mode not in GRAM_ASSEMBLY_MODES:
+        raise ValueError(f"unknown gram assembly mode {mode!r}: "
+                         f"expected one of {GRAM_ASSEMBLY_MODES}")
+    axes = tuple(axes)
+    if mode == "split":
+        return P(axes), "sharded(axis0)"
+    if mode == "all":
+        return P(), "replicated(all-gathered)"
+    return P(axes), "master(shard0 of leading device axis)"
+
+
 def sweep_shard_axes(mesh):
     """Mesh axes the batch-sharded sweep lane (``SweepPlan.shard``) splits
     over — the canonical batch axes from this rules table that actually

@@ -91,15 +91,43 @@ def test_chan_sequential_fold_property(sizes, offset, seed):
 # ---------------------------------------------------------------------------
 
 
-def test_accumulate_rejects_reducers_without_sequential_form(setup):
-    """'gram' (BatchDot) and 'pmean' (KFRA) need the whole batch at once;
-    the accumulated plan must fail fast with the reducer names, not with
-    a shape error three layers deep."""
+def test_accumulate_rejects_non_streaming_reducers():
+    """BatchDot ('gram') and KFRA ('pmean') stream now; the capability
+    gate remains for third-party reducers that genuinely need the whole
+    batch resident — ``supports_streaming = False`` must fail fast with
+    the extension and reducer names, not with a shape error three layers
+    deep."""
+    from repro.core import Extension, Reducer
+
+    class WholeBatchReducer(Reducer):
+        name = "whole_batch_test"
+        supports_streaming = False
+
+    ext = Extension("_whole_batch_stat", "first", reduce=WholeBatchReducer())
+    plan = plan_sweeps((ext,), ExtensionConfig()).accumulate(2)
+    with pytest.raises(ValueError, match="sequential accumulator") as ei:
+        plan._check_extensions((ext,))
+    assert "_whole_batch_stat" in str(ei.value)
+    assert "whole_batch_test" in str(ei.value)
+    assert "supports_streaming" in str(ei.value)
+
+
+def test_accumulate_streams_gram_and_pmean(setup):
+    """The former rejection cases: BatchDot's Gram matrix and KFRA's Ḡ
+    recursion now stream — row-block scatter and partial-mean replay —
+    and match the monolithic sweep (depth covered by the differential
+    suite; this is the fast direct check on the lifted restriction)."""
     model, params, x, y = setup
+    loss = CrossEntropyLoss()
+    exts = (by_name("batch_dot"), by_name("kfra"))
+    ref = run(model, params, x, y, loss, extensions=exts)
+    res = plan_sweeps(exts, ExtensionConfig()).accumulate(3).run(
+        model, params, x, y, loss)
     for name in ("batch_dot", "kfra"):
-        plan = plan_sweeps((by_name(name),), ExtensionConfig()).accumulate(2)
-        with pytest.raises(ValueError, match="sequential accumulator"):
-            plan.run(model, params, x, y, CrossEntropyLoss())
+        for a, b in zip(jax.tree.leaves(ref.ext[name]),
+                        jax.tree.leaves(res.ext[name])):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=3e-5, atol=3e-5, err_msg=name)
 
 
 def test_accumulate_validates_num_microbatches():
@@ -123,7 +151,8 @@ def test_describe_reports_accumulation(setup):
     exts = (by_name("batch_l2"), by_name("variance"), by_name("kflr"))
     desc = plan_sweeps(exts, cfg).accumulate(4).describe()
     assert "accumulate=4 microbatches" in desc
-    assert "moment_merge" in desc
+    assert "variance:moment_merge(sequential Chan merge)" in desc
+    assert "kflr:kron(weighted A mean + B sum)" in desc
     grid = plan_sweeps(exts, cfg).shard(make_data_mesh(), "data") \
         .accumulate(4).describe()
     assert "shard_axes=['data']" in grid and "accumulate=4" in grid

@@ -54,6 +54,7 @@ SUBSETS = [(e.name,) for e in ALL_EXTENSIONS] + [
     ("diag_ggn", "kflr", "ggn_trace"),
     ("diag_ggn_mc", "kfac"),
     ("batch_grad", "batch_l2", "diag_ggn", "kflr"),
+    ("ntk", "ntk_classwise", "batch_dot"),
     ("variance", "batch_dot", "diag_ggn", "ggn_trace", "diag_ggn_mc",
      "kfac", "kfra", "diag_hessian"),
 ]
@@ -153,16 +154,13 @@ def test_sharded_sweep_matches_single_device(names, sharded_setup):
 # streaming accumulated lane: the same invariant across microbatches
 # ---------------------------------------------------------------------------
 
-# BatchDot ('gram') and KFRA ('pmean') have no sequential accumulator —
-# their reducers need the whole batch at once; AccumulatedSweepPlan rejects
-# them by design (tests/test_accumulated_sweep.py pins the error).  Every
-# other extension must accumulate exactly.
-_NO_SEQ = {"batch_dot", "kfra"}
-ACC_SUBSETS = []
-for s in SUBSETS:
-    t = tuple(n for n in s if n not in _NO_SEQ)
-    if t and t not in ACC_SUBSETS:
-        ACC_SUBSETS.append(t)
+# Every extension accumulates now: BatchDot / NTK ('gram') stream row
+# blocks — diagonal blocks from the main scan, one extra pass per slice
+# pair for the off-diagonals — and KFRA ('pmean') streams its chain
+# partials with a final replay of the Ḡ recursion.  Reducers that
+# genuinely cannot stream declare ``supports_streaming = False`` and are
+# rejected (tests/test_accumulated_sweep.py pins the error).
+ACC_SUBSETS = list(SUBSETS)
 
 
 def _assert_results_match(res, ref, label):

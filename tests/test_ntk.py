@@ -1,0 +1,224 @@
+"""Empirical NTK extension family, against a ``jax.jacrev`` oracle.
+
+``NTK`` / ``NTKClasswise`` ride the engine's raw-Jacobian ("jac") sweep:
+identity cotangents per class through the shared transposed-Jacobian
+backward give per-sample Jacobian factors, and the per-parameter Gram
+blocks they induce sum (``ntk_total``) to the empirical kernel
+Θ(x, x') = J(x) J(x')ᵀ.  The oracle here materializes the full Jacobian
+with ``jax.jacrev`` — exactly the O(N·C·P) construction the extension
+avoids — and pins both conventions:
+
+* ``ntk``: class-diagonal sum, ``T[n, m] = Σ_c ⟨J_c(n), J_c(m)⟩``
+  (``einsum('ncmc->nm')`` of the full 4-index kernel);
+* ``ntk_classwise``: trailing class axis, ``T[n, m, c] = ⟨J_c(n), J_c(m)⟩``.
+
+The fused cross-block Pallas kernel, the streamed row-block lanes
+(accumulate(k), uneven finals), the sharded lane with its three assembly
+modes ('split' / 'all' / 'master') and the shard × accumulate grid are
+all compared against the same monolithic run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Activation,
+    CrossEntropyLoss,
+    Dense,
+    ExtensionConfig,
+    Sequential,
+    by_name,
+    ntk_total,
+    plan_sweeps,
+    run,
+)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.launch.mesh import make_data_mesh
+
+N, D, H, C = 11, 5, 7, 3
+LOSS = CrossEntropyLoss()
+NTK_EXTS = (by_name("ntk"), by_name("ntk_classwise"))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = Sequential([Dense(D, H), Activation("tanh"), Dense(H, C)])
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    y = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, C)
+    return model, params, x, y
+
+
+@pytest.fixture(scope="module")
+def oracle_kernel(setup):
+    """Full 4-index kernel K[n, c, m, c'] from the materialized Jacobian."""
+    model, params, x, _ = setup
+
+    def f(p):
+        z, _ = model.forward_tape(p, x)
+        return z
+
+    J = jax.jacrev(f)(params)
+    Jf = jnp.concatenate(
+        [l.reshape(N * C, -1) for l in jax.tree.leaves(J)], axis=1)
+    return np.asarray((Jf @ Jf.T).reshape(N, C, N, C))
+
+
+def _run(setup, cfg=ExtensionConfig(), exts=NTK_EXTS):
+    model, params, x, y = setup
+    return run(model, params, x, y, LOSS, extensions=exts, cfg=cfg,
+               rng=jax.random.PRNGKey(42))
+
+
+def test_ntk_matches_jacrev_oracle(setup, oracle_kernel):
+    res = _run(setup)
+    np.testing.assert_allclose(
+        np.asarray(ntk_total(res.ext["ntk"])),
+        np.einsum("ncmc->nm", oracle_kernel), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ntk_total(res.ext["ntk_classwise"])),
+        np.einsum("ncmc->nmc", oracle_kernel), rtol=1e-5, atol=1e-5)
+
+
+def test_classwise_sums_to_total(setup):
+    res = _run(setup)
+    np.testing.assert_allclose(
+        np.asarray(ntk_total(res.ext["ntk_classwise"]).sum(-1)),
+        np.asarray(ntk_total(res.ext["ntk"])), rtol=1e-5, atol=1e-5)
+
+
+def test_per_parameter_blocks_are_gram(setup):
+    """Each per-parameter leaf is itself a PSD Gram matrix."""
+    res = _run(setup)
+    for leaf in jax.tree.leaves(res.ext["ntk"]):
+        m = np.asarray(leaf)
+        np.testing.assert_allclose(m, m.T, rtol=1e-5, atol=1e-6)
+        assert np.linalg.eigvalsh(m).min() > -1e-4
+
+
+def test_kernel_path_matches_reference(setup):
+    ref = _run(setup, ExtensionConfig(use_kernels=False))
+    for cfg in (ExtensionConfig(use_kernels=True, use_fused=True),
+                ExtensionConfig(use_kernels=True, use_fused=False)):
+        res = _run(setup, cfg)
+        for name in ("ntk", "ntk_classwise"):
+            for a, b in zip(jax.tree.leaves(ref.ext[name]),
+                            jax.tree.leaves(res.ext[name])):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=3e-5, atol=3e-5)
+
+
+def test_ntk_requires_flat_outputs(setup):
+    model, params, _, _ = setup
+    x3 = jax.random.normal(jax.random.PRNGKey(5), (4, 3, D))
+    y3 = jax.random.randint(jax.random.PRNGKey(6), (4, 3), 0, C)
+    with pytest.raises(ValueError, match="flat \\[N, C\\]"):
+        run(model, params, x3, y3, LOSS, extensions=(by_name("ntk"),))
+
+
+def test_ntk_total_rejects_empty_tree():
+    with pytest.raises(ValueError, match="empty NTK stats tree"):
+        ntk_total({})
+
+
+def test_cross_dot_kernel_matches_ref():
+    """The fused cross-block J·Jᵀ kernel — the off-diagonal primitive the
+    streamed Gram scatter relies on — against its einsum oracle, including
+    shapes that force tile padding."""
+    rng = np.random.default_rng(0)
+    for (e, n1, n2, r, a, b) in [(2, 3, 4, 1, 8, 8), (3, 5, 7, 2, 33, 21),
+                                 (1, 130, 70, 1, 16, 8)]:
+        A1, B1 = (jnp.asarray(rng.normal(size=(e, n1, r, s)), jnp.float32)
+                  for s in (a, b))
+        A2, B2 = (jnp.asarray(rng.normal(size=(e, n2, r, s)), jnp.float32)
+                  for s in (a, b))
+        got = kops.cross_dot(A1, B1, A2, B2)
+        want = kref.cross_dot(A1, B1, A2, B2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# streamed row-block lanes
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_matches_monolithic(setup):
+    """accumulate(k) streams diagonal Gram blocks through the main scan
+    and off-diagonal cross blocks through the pair passes; k ∈ {2, 3} on
+    N=11 exercises uneven final microbatches (6+5 and 4+4+3)."""
+    for cfg in (ExtensionConfig(), ExtensionConfig(use_kernels=True)):
+        ref = _run(setup, cfg)
+        for k in (2, 3):
+            model, params, x, y = setup
+            res = plan_sweeps(NTK_EXTS, cfg).accumulate(k).run(
+                model, params, x, y, LOSS, cfg=cfg,
+                rng=jax.random.PRNGKey(42))
+            for name in ("ntk", "ntk_classwise"):
+                for a, b in zip(jax.tree.leaves(ref.ext[name]),
+                                jax.tree.leaves(res.ext[name])):
+                    np.testing.assert_allclose(
+                        np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5,
+                        err_msg=f"streamed {name} at k={k} under {cfg}")
+
+
+# ---------------------------------------------------------------------------
+# sharded lane: assembly modes
+# ---------------------------------------------------------------------------
+
+NS = 16  # divisible by any power-of-two device count the CI lanes use
+
+
+@pytest.fixture(scope="module")
+def sharded_setup(setup):
+    model, params, _, _ = setup
+    x = jax.random.normal(jax.random.PRNGKey(3), (NS, D))
+    y = jax.random.randint(jax.random.PRNGKey(4), (NS,), 0, C)
+    return model, params, x, y, make_data_mesh()
+
+
+def _ref_total(sharded_setup):
+    model, params, x, y, _ = sharded_setup
+    res = run(model, params, x, y, LOSS, extensions=NTK_EXTS,
+              rng=jax.random.PRNGKey(42))
+    return np.asarray(ntk_total(res.ext["ntk"]))
+
+
+@pytest.mark.parametrize("accumulate", [None, 2],
+                         ids=["monolithic", "grid-k2"])
+def test_sharded_assembly_modes(sharded_setup, accumulate):
+    """'split' leaves row blocks on their shards (out-spec concatenates
+    them back to the global [N, N]); 'all' all-gathers the full kernel to
+    every shard; 'master' materializes it on the leading [S, ...] slot
+    only, zeros elsewhere.  All three must reproduce the single-device
+    kernel — on the 8-virtual-device CI lane this covers genuine
+    cross-shard assembly, and the grid lane crosses it with streaming."""
+    model, params, x, y, mesh = sharded_setup
+    want = _ref_total(sharded_setup)
+    n_dev = len(mesh.devices.flatten())
+    for mode in ("split", "all", "master"):
+        plan = plan_sweeps(NTK_EXTS, ExtensionConfig()).shard(
+            mesh, "data", gram_assembly=mode)
+        if accumulate:
+            plan = plan.accumulate(accumulate)
+        res = plan.run(model, params, x, y, LOSS,
+                       rng=jax.random.PRNGKey(42))
+        total = np.asarray(ntk_total(res.ext["ntk"]))
+        if mode == "master":
+            assert total.shape == (n_dev, NS, NS)
+            np.testing.assert_allclose(total[0], want, rtol=3e-5, atol=3e-5)
+            if n_dev > 1:
+                np.testing.assert_allclose(total[1:], 0.0, atol=1e-12)
+        else:
+            assert total.shape == (NS, NS)
+            np.testing.assert_allclose(total, want, rtol=3e-5, atol=3e-5,
+                                       err_msg=f"assembly mode {mode}")
+
+
+def test_unknown_assembly_mode_rejected(sharded_setup):
+    *_, mesh = sharded_setup
+    with pytest.raises(ValueError, match="gram assembly mode"):
+        plan_sweeps(NTK_EXTS, ExtensionConfig()).shard(
+            mesh, "data", gram_assembly="bogus")

@@ -1,0 +1,161 @@
+"""Reducer protocol conformance, for every registered reducer.
+
+The engine's three drivers (shard_map reducer, lax.scan sequential
+accumulator, shard × accumulate grid) fold partial results through the
+same :class:`repro.core.Reducer` protocol — so the algebra every driver
+relies on is pinned here once, with hypothesis, for the whole registry:
+
+* ``merge`` is associative (the sharded binary tree and the sequential
+  left fold must agree);
+* ``merge`` is order-invariant whenever the reducer declares
+  ``commutative`` (concat is by-design order-dependent);
+* folding ``update`` over a partition in any order, then ``finalize``,
+  is permutation-invariant for commutative reducers (microbatch schedule
+  independence).
+
+Plus the deprecated string-alias path: strings resolve with a
+``DeprecationWarning`` naming the replacement, unknown names fail with
+the registry contents, and third-party reducers round-trip through
+``register_reducer``.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import REDUCERS, Reducer, register_reducer, resolve_reducer
+from repro.core.extensions import Extension
+
+ALL_NAMES = sorted(REDUCERS)
+COMMUTATIVE_NAMES = [n for n in ALL_NAMES if REDUCERS[n].commutative]
+
+
+def _partial(name, rng):
+    """A random accumulated partial in reducer ``name``'s algebra."""
+    if name == "kron":
+        return {"w": {"A": jnp.asarray(rng.normal(size=(3, 3))),
+                      "B": jnp.asarray(rng.normal(size=(2, 2)))}}
+    if name == "moment_merge":
+        rows = rng.normal(size=(4, 3)) * 2.0
+        s = rows.sum(0)
+        return {"n": jnp.float32(4.0), "mean": jnp.asarray(s / 4.0),
+                "m2": jnp.asarray((rows ** 2).sum(0) - s ** 2 / 4.0)}
+    if name == "concat":
+        return jnp.asarray(rng.normal(size=(int(rng.integers(1, 4)), 3)))
+    if name == "gram":
+        # streamed Gram partials are disjoint-block scatters into a
+        # shared [N, N] zero frame; merging = adding the frames
+        full = np.zeros((6, 6))
+        i = int(rng.integers(0, 3)) * 2
+        full[i:i + 2, i:i + 2] = rng.normal(size=(2, 2))
+        return jnp.asarray(full)
+    return jnp.asarray(rng.normal(size=(3, 2)))
+
+
+def _assert_tree_close(a, b, **kw):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6, **kw)
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_merge_is_associative(seed):
+    for name in ALL_NAMES:
+        red = REDUCERS[name]
+        rng = np.random.default_rng(seed)
+        a, b, c = (_partial(name, rng) for _ in range(3))
+        _assert_tree_close(red.merge(red.merge(a, b), c),
+                           red.merge(a, red.merge(b, c)),
+                           err_msg=f"{name} merge associativity")
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_merge_is_commutative_when_declared(seed):
+    for name in COMMUTATIVE_NAMES:
+        red = REDUCERS[name]
+        rng = np.random.default_rng(seed)
+        a, b = _partial(name, rng), _partial(name, rng)
+        _assert_tree_close(red.merge(a, b), red.merge(b, a),
+                           err_msg=f"{name} merge commutativity")
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       perm_seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_update_fold_is_order_invariant(seed, perm_seed):
+    """init → update* (any microbatch order) → finalize is schedule-
+    independent for commutative reducers — the invariant that makes the
+    accumulated lane's results independent of how the batch is sliced."""
+    for name in COMMUTATIVE_NAMES:
+        red = REDUCERS[name]
+        rng = np.random.default_rng(seed)
+        parts = [_partial(name, rng) for _ in range(4)]
+        weights = [2.0, 3.0, 1.0, 4.0]
+        meta_fin = {"total_batch": float(sum(weights))}
+        perm = np.random.default_rng(perm_seed).permutation(len(parts))
+
+        def fold(order):
+            acc = red.init(jax.tree.map(jnp.zeros_like, parts[0]))
+            for i in order:
+                acc = red.update(acc, parts[i], {"weight": weights[i]})
+            return red.finalize(acc, meta_fin)
+
+        _assert_tree_close(fold(range(len(parts))), fold(perm),
+                           err_msg=f"{name} update order invariance")
+
+
+def test_placement_and_streaming_form_are_reported():
+    assert REDUCERS["psum"].placement == "replicated"
+    assert REDUCERS["concat"].placement == "sharded(axis0)"
+    assert REDUCERS["gram"].placement == "sharded(axis0)"
+    assert REDUCERS["gram"].pairwise and REDUCERS["gram"].local_rows
+    for red in REDUCERS.values():
+        assert isinstance(red.streaming_form, str) and red.streaming_form
+
+
+def test_string_alias_warns_with_replacement():
+    with pytest.warns(DeprecationWarning, match="PSUM"):
+        r = resolve_reducer("psum")
+    assert r is REDUCERS["psum"]
+
+
+def test_extension_resolves_string_alias_with_warning():
+    with pytest.warns(DeprecationWarning, match="GRAM"):
+        e = Extension("_tmp_stat", "first", reduce="gram")
+    assert e.reduce is REDUCERS["gram"]
+
+
+def test_reducer_instance_passes_through_silently():
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_reducer(REDUCERS["kron"]) is REDUCERS["kron"]
+
+
+def test_unknown_string_raises_with_registry():
+    with pytest.raises(ValueError, match="registered reducers"):
+        resolve_reducer("definitely_not_a_reducer")
+
+
+def test_bad_spec_type_raises():
+    with pytest.raises(TypeError, match="Reducer"):
+        resolve_reducer(42)
+
+
+def test_register_reducer_roundtrip():
+    class MyReducer(Reducer):
+        name = "my_test_reducer"
+
+    r = register_reducer(MyReducer())
+    try:
+        with pytest.warns(DeprecationWarning):
+            assert resolve_reducer("my_test_reducer") is r
+    finally:
+        del REDUCERS["my_test_reducer"]

@@ -57,8 +57,11 @@ def setup():
 
 
 def test_reduce_spec_table():
+    from repro.core import Reducer
+
     spec = reduce_spec(ALL_EXTENSIONS)
-    assert spec == {
+    assert all(isinstance(r, Reducer) for r in spec.values())
+    assert {nm: r.name for nm, r in spec.items()} == {
         "batch_grad": "concat",
         "batch_l2": "concat",
         "batch_dot": "gram",
@@ -71,6 +74,8 @@ def test_reduce_spec_table():
         "kfra": "pmean",
         "diag_hessian": "psum",
         "ggn_trace": "concat",
+        "ntk": "gram",
+        "ntk_classwise": "gram",
     }
 
 
