@@ -18,13 +18,24 @@ batch.  Lanes per shape (N, D, H, C), mixed first+second-order workload
                                 heuristics the other suites stop at
   accumulate/baseline/jnp_k4    accumulate(4) on the pure-jnp path (the
                                 per-extension baseline; ungated)
+  accumulate/fused/ckpt_none    the host-driven SweepStream executor
+                                (run_checkpointed, no checkpointer) —
+                                what preemption-safety costs before any
+                                snapshot is written
+  accumulate/fused/ckpt_every2  the same stream snapshotting accumulator
+                                state + cursor to disk every 2 work units
+                                (SweepCheckpointer, keep=1)
 
-``derived`` carries the ratio vs accumulate/fused/mono (and for the big
-batch, its microbatch row count).  The fused lanes are gated by
+``derived`` carries the ratio vs accumulate/fused/mono (for the big
+batch, its microbatch row count; for the ckpt lanes, the ratio vs the
+unsnapshotted stream).  The fused lanes are gated by
 ``benchmarks/check_regression.py`` against ``BENCH_smoke_accumulate.json``
 like every other fused claim.
 """
 from __future__ import annotations
+
+import shutil
+import tempfile
 
 import jax
 
@@ -108,6 +119,48 @@ def main():
         t = time_group({"big": lambda: big(params, xb, yb)})["big"]
         emit(f"accumulate/fused/bigbatch_k8/N{big_n}_d{d}_h{h}_c{c}", t,
              f"microbatch_rows={-(-big_n // 8)}")
+
+        # Checkpoint overhead: the same accumulate(8) schedule through the
+        # host-driven SweepStream executor, without snapshots vs snapshot
+        # every 2 work units.  One stream instance is rewound to its
+        # initial state between iterations so the lanes measure the
+        # steady-state stream (host dispatch + snapshot serialization +
+        # disk), not per-call retracing; each snapshotting iteration
+        # starts from a clean dir so every run writes the same files.
+        from repro.train.checkpoint import SweepCheckpointer
+
+        stream = plan_f.accumulate(8).stream(model, params, x, y, loss,
+                                             cfg=fused)
+        state0 = jax.device_get(stream.state_arrays())
+
+        def ckpt_run(store=None, every=2):
+            stream.load_state(0, state0)
+            while not stream.done:
+                stream.step()
+                if store is not None and (stream.done
+                                          or stream.cursor % every == 0):
+                    store.save(stream.cursor, stream.state_arrays(),
+                               stream.schedule_meta())
+            return stream.result().loss
+
+        ckpt_dir = tempfile.mkdtemp(prefix="bench_sweep_ckpt_")
+        try:
+            def ckpt_every2():
+                shutil.rmtree(ckpt_dir, ignore_errors=True)
+                return ckpt_run(SweepCheckpointer(ckpt_dir, keep=1))
+
+            tc = time_group({
+                "accumulate/fused/ckpt_none": lambda: ckpt_run(),
+                "accumulate/fused/ckpt_every2": ckpt_every2,
+            })
+        finally:
+            shutil.rmtree(ckpt_dir, ignore_errors=True)
+        none_us = tc["accumulate/fused/ckpt_none"]
+        emit(f"accumulate/fused/ckpt_none/{tag}", none_us,
+             f"x{none_us / base:.2f}_vs_mono")
+        every2_us = tc["accumulate/fused/ckpt_every2"]
+        emit(f"accumulate/fused/ckpt_every2/{tag}", every2_us,
+             f"x{every2_us / none_us:.2f}_vs_ckpt_none")
 
 
 if __name__ == "__main__":

@@ -76,6 +76,7 @@ from .engine import (
     Results,
     ShardedSweepPlan,
     SweepPlan,
+    SweepStream,
     loss_and_grad,
     ntk_total,
     plan_for_batch,

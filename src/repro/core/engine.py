@@ -33,6 +33,14 @@ Scale-out lanes (both driven by the extensions' declared ``reduce`` specs):
                                        microbatches (``lax.scan``; the same
                                        reduce specs as running accumulators)
   ``plan.shard(mesh).accumulate(k)``   both: the shard × accumulate grid
+
+The accumulated lane additionally has a preemption-safe form: the plan's
+``stream(...)`` method returns a :class:`SweepStream` — the identical
+slice schedule driven step by step from the host, whose accumulator state
+is a checkpointable pytree of arrays.  ``run_checkpointed(...)`` /
+``resume(...)`` drive it with snapshots through a checkpointer (see
+``repro.train.checkpoint.SweepCheckpointer``), restart-exact and elastic
+across device-mesh changes.
 """
 from __future__ import annotations
 
@@ -938,6 +946,528 @@ class AccumulatedSweepPlan:
         lv, grads, logits, ext = fn(params, inputs, targets, rng,
                                     jnp.asarray(mg, jnp.float32))
         return Results(loss=lv, grads=grads, logits=logits, ext=ext)
+
+    # -- preemption-safe streaming (SweepStream) ----------------------------
+
+    def stream(self, model, params, inputs, targets, loss,
+               cfg: Optional[ExtensionConfig] = None,
+               rng: Optional[jax.Array] = None) -> "SweepStream":
+        """Build the checkpointable stepwise executor for this plan.
+
+        Returns a :class:`SweepStream` over the same microbatch schedule
+        as :meth:`run`, but driven one work unit at a time from the host
+        so its accumulator state can be snapshotted between units (and
+        restored — possibly in a different process, on a different device
+        mesh).  Most callers want :meth:`run_checkpointed` /
+        :meth:`resume`, which wrap the drive loop.
+        """
+        return SweepStream(self, model, params, inputs, targets, loss,
+                           cfg=cfg, rng=rng)
+
+    def run_checkpointed(self, model, params, inputs, targets, loss,
+                         cfg: Optional[ExtensionConfig] = None,
+                         rng: Optional[jax.Array] = None, *,
+                         checkpointer=None, checkpoint_every: int = 1,
+                         injector=None, resume: bool = False) -> Results:
+        """Run the accumulated sweep preemption-safely.
+
+        Drives a :class:`SweepStream` work unit by work unit, saving its
+        accumulator state through ``checkpointer`` every
+        ``checkpoint_every`` units (plus once at completion).  A process
+        killed mid-sweep restarts with ``resume=True`` (or via
+        :meth:`resume`) and continues from the last snapshot, producing
+        results identical to an uninterrupted run — mask-aware 1/M
+        scaling and per-global-sample-index MC keying included.
+
+        Parameters
+        ----------
+        checkpointer : object, optional
+            Duck-typed snapshot store (``repro.train.checkpoint.
+            SweepCheckpointer``): ``save(cursor, state, meta)`` and
+            ``restore_latest(state_like) -> (cursor, state, meta) | None``.
+            ``None`` runs the stream without snapshots.
+        checkpoint_every : int
+            Save cadence in work units (clamped to >= 1).
+        injector : object, optional
+            Fault hook called as ``injector.check(cursor)`` before each
+            work unit (``repro.train.fault.FailureInjector``) — lets
+            tests kill the sweep mid-stream deterministically.
+        resume : bool
+            When True, restore the latest snapshot from ``checkpointer``
+            before driving (a missing snapshot is a cold start, not an
+            error; :meth:`resume` is the strict variant).
+        """
+        stream = self.stream(model, params, inputs, targets, loss,
+                             cfg=cfg, rng=rng)
+        if resume and checkpointer is not None:
+            snap = checkpointer.restore_latest(stream.state_arrays())
+            if snap is not None:
+                stream.load_state(*snap)
+        return _drive_stream(stream, checkpointer, checkpoint_every,
+                             injector)
+
+    def resume(self, model, params, inputs, targets, loss, checkpointer,
+               cfg: Optional[ExtensionConfig] = None,
+               rng: Optional[jax.Array] = None, *,
+               checkpoint_every: int = 1, injector=None) -> Results:
+        """Restart an interrupted checkpointed sweep — strict.
+
+        The restart counterpart of :meth:`run_checkpointed`: restores the
+        latest snapshot from ``checkpointer`` and drives the remaining
+        work units.  Raises ``FileNotFoundError`` when no snapshot exists
+        (a restart driver that silently recomputes from scratch would
+        mask a broken checkpoint path).  The caller must rebuild the
+        stream inputs identically (same batch, extensions, loss, cfg and
+        rng/``mc_seed``) — the snapshot's schedule metadata is validated
+        against the rebuilt stream and mismatches raise with the first
+        offending field.  The device mesh may differ: restored
+        accumulators are replicated host-side values, so a sweep
+        checkpointed on N devices resumes on M unchanged (elastic
+        re-sharding).
+        """
+        stream = self.stream(model, params, inputs, targets, loss,
+                             cfg=cfg, rng=rng)
+        snap = checkpointer.restore_latest(stream.state_arrays())
+        if snap is None:
+            raise FileNotFoundError(
+                "resume(...) found no sweep snapshot to restore — run "
+                "run_checkpointed(...) first, or call it with resume=True "
+                "to tolerate a cold start")
+        stream.load_state(*snap)
+        return _drive_stream(stream, checkpointer, checkpoint_every,
+                             injector)
+
+
+def _drive_stream(stream, checkpointer, checkpoint_every, injector):
+    """Drive a :class:`SweepStream` to completion with periodic snapshots.
+
+    ``injector.check(cursor)`` runs *before* each work unit, so a fault
+    injected at cursor j leaves units 0..j-1 done and their last snapshot
+    on disk — exactly the state a preempted process would leave behind.
+    """
+    every = max(1, int(checkpoint_every))
+    while not stream.done:
+        if injector is not None:
+            injector.check(stream.cursor)
+        stream.step()
+        if checkpointer is not None and (stream.done
+                                         or stream.cursor % every == 0):
+            checkpointer.save(stream.cursor, stream.state_arrays(),
+                              stream.schedule_meta())
+    return stream.result()
+
+
+class SweepStream:
+    """Stepwise, checkpointable executor of an accumulated sweep.
+
+    The preemption-safe form of :class:`AccumulatedSweepPlan`: the same
+    microbatch schedule, but instead of folding every slice inside one
+    ``lax.scan`` trace, the schedule is materialized as a host-driven
+    list of *work units* — one per microbatch slice, then one per
+    off-diagonal Gram/NTK slice pair — and :meth:`step` executes them one
+    at a time, folding each result into ``self.state``: a pytree of
+    arrays only (summed loss/grads, per-reducer accumulators, preallocated
+    per-sample row buffers, monolithic ``[n, n, ...]`` pairwise blocks).
+
+    Between any two units the pair ``(cursor, state)`` is a complete
+    snapshot: :meth:`state_arrays` serializes every reducer accumulator
+    (``Reducer.serialize``), :meth:`load_state` restores it, and
+    :meth:`schedule_meta` carries the schedule invariants a restore is
+    validated against.  Because each work unit covers a *global*
+    contiguous row range ``[t·m, (t+1)·m)`` and MC factors are keyed per
+    global sample index, an interrupted-and-resumed stream reproduces the
+    uninterrupted run exactly — and because the folded accumulators are
+    replicated host-side values combined through the reducers'
+    merge algebra, a snapshot taken on an N-device mesh resumes on an
+    M-device mesh unchanged (elastic re-sharding; only per-slice compute
+    is re-sharded, never the accumulator state).
+
+    When the plan is sharded, full slices whose rows split evenly over
+    the mesh run under ``shard_map`` (pairwise extensions and the uneven
+    remainder slice run single-device); pairwise outputs always use the
+    monolithic ``[n, n, ...]`` layout regardless of the plan's
+    ``gram_assembly``.
+
+    Reducers opt out via ``supports_checkpoint = False`` (accumulator
+    state that does not round-trip through ``serialize``/``deserialize``)
+    and are rejected at stream construction with an actionable error.
+    """
+
+    def __init__(self, plan: "AccumulatedSweepPlan", model, params, inputs,
+                 targets, loss, cfg: Optional[ExtensionConfig] = None,
+                 rng: Optional[jax.Array] = None):
+        cfg = cfg or ExtensionConfig()
+        self.plan = plan
+        self.model = model
+        self.params = params
+        self.inputs = inputs
+        self.targets = targets
+        self.loss = loss
+        # Resolve through the plan-carried extension objects first so
+        # custom (unregistered) first-sweep extensions stream too; the
+        # registry covers the built-in curvature names.
+        local = {e.name: e for e in (plan.plan.first_exts
+                                     + plan.plan.kron_exts)}
+        self.extensions = tuple(local[nm] if nm in local else by_name(nm)
+                                for nm in sorted(plan.plan.names))
+        self.red = plan._check_extensions(self.extensions)
+        bad = sorted(nm for nm, r in self.red.items()
+                     if not r.supports_checkpoint)
+        if bad:
+            kinds = ", ".join(f"{nm} ({self.red[nm].name})" for nm in bad)
+            raise ValueError(
+                f"extensions [{kinds}] cannot be checkpointed: their "
+                "reducers declare supports_checkpoint=False — the "
+                "accumulator state does not round-trip through "
+                "serialize/deserialize.  Run them on an uncheckpointed "
+                "sweep, implement serialize/deserialize on the reducer, "
+                "or drop them from the checkpointed plan.")
+        self.rng = _default_rng(plan.plan.sweeps, cfg, rng)
+        self.pair_names = [e.name for e in self.extensions
+                           if self.red[e.name].pairwise]
+        self.concat_names = [e.name for e in self.extensions
+                             if self.red[e.name].streams_rows]
+        self.carry_names = [e.name for e in self.extensions
+                            if not (self.red[e.name].pairwise
+                                    or self.red[e.name].streams_rows)]
+        self._pair_exts = tuple(e for e in self.extensions
+                                if e.name in self.pair_names)
+
+        n = jax.tree.leaves(inputs)[0].shape[0]
+        k = max(1, min(int(plan.num_microbatches), n))
+        self.n = n
+        self.m = m = -(-n // k)   # slice rows; last slice may be smaller
+        self.k_full = n // m
+        self.rem = n - self.k_full * m
+        self.n_slices = self.k_full + (1 if self.rem else 0)
+        self.n_shards = (plan.sharded.n_shards
+                         if plan.sharded is not None else 1)
+
+        # The canonical schedule is mesh-independent: slices cover global
+        # contiguous row ranges, so the global sample index of batch row
+        # r is r in every lane — the invariant MC-draw exactness and
+        # elastic resume both rest on.
+        mg = loss.num_units(targets)
+        self.cfg = dataclasses.replace(
+            cfg, shard_axes=None, total_units=jnp.asarray(mg, jnp.float32),
+            total_batch=n, accum_stats=True, cross_split=None)
+
+        units = [("slice", t) for t in range(self.n_slices)]
+        if self.pair_names:
+            units += [("pair", p * m, q * m, m)
+                      for p in range(self.k_full)
+                      for q in range(p + 1, self.k_full)]
+            if self.rem:
+                units += [("pair", p * m, self.k_full * m, self.rem)
+                          for p in range(self.k_full)]
+        self.units = units
+        self._cursor = 0
+        self._jit_cache = {}
+        self._slice_jit = jax.jit(self._slice_results)
+        self.state = self._init_state()
+
+    # -- schedule -----------------------------------------------------------
+
+    @property
+    def cursor(self) -> int:
+        """Index of the next work unit to execute (== the snapshot step)."""
+        return self._cursor
+
+    @property
+    def num_units(self) -> int:
+        """Total work units: slices, then off-diagonal pair passes."""
+        return len(self.units)
+
+    @property
+    def done(self) -> bool:
+        return self._cursor >= len(self.units)
+
+    def describe(self) -> str:
+        pairs = len(self.units) - self.n_slices
+        return (f"{self.plan.describe()} | stream: {self.n_slices} slice "
+                f"units ({self.m} rows each) + {pairs} pair units, "
+                f"cursor={self._cursor}/{len(self.units)}")
+
+    # -- per-unit execution -------------------------------------------------
+
+    def _slice_results(self, params, rng, x_i, y_i, off):
+        cfg_i = dataclasses.replace(self.cfg, sample_offset=off)
+        res = run(self.model, params, x_i, y_i, self.loss,
+                  extensions=self.extensions, cfg=cfg_i, rng=rng)
+        return (res.loss, res.grads,
+                {nm: res.ext[nm] for nm in self.carry_names},
+                res.logits,
+                {nm: res.ext[nm] for nm in self.concat_names},
+                {nm: res.ext[nm] for nm in self.pair_names})
+
+    def _init_state(self):
+        def head(a):
+            return a[:self.m]
+
+        shapes = jax.eval_shape(
+            self._slice_results, self.params, self.rng,
+            jax.tree.map(head, self.inputs),
+            jax.tree.map(head, self.targets), 0)
+        lv_s, g_s, carry_s, z_s, rows_s, pair_s = shapes
+
+        def zeros(s):
+            return jnp.zeros(s.shape, s.dtype)
+
+        def rows_buf(s):
+            return jnp.zeros((self.n,) + s.shape[1:], s.dtype)
+
+        def pair_buf(s):
+            return jnp.zeros((self.n, self.n) + s.shape[2:], s.dtype)
+
+        return {
+            "loss": zeros(lv_s),
+            "grads": jax.tree.map(zeros, g_s),
+            "carry": {nm: self.red[nm].init(
+                          jax.tree.map(zeros, carry_s[nm]))
+                      for nm in self.carry_names},
+            "logits": jax.tree.map(rows_buf, z_s),
+            "rows": {nm: jax.tree.map(rows_buf, rows_s[nm])
+                     for nm in self.concat_names},
+            "pair": {nm: jax.tree.map(pair_buf, pair_s[nm])
+                     for nm in self.pair_names},
+        }
+
+    def step(self) -> int:
+        """Execute the next work unit; returns the advanced cursor."""
+        if self.done:
+            raise ValueError("sweep stream already complete — result() "
+                             "holds the finalized Results")
+        unit = self.units[self._cursor]
+        if unit[0] == "slice":
+            self._do_slice(unit[1])
+        else:
+            self._do_pair(*unit[1:])
+        self._cursor += 1
+        return self._cursor
+
+    def _use_shard_map(self, rows) -> bool:
+        return (self.plan.sharded is not None and self.n_shards > 1
+                and rows % self.n_shards == 0)
+
+    def _sharded_slice(self):
+        if "sharded" not in self._jit_cache:
+            sp = self.plan.sharded
+            axes = tuple(sp.axes)
+            batch = P(axes)
+            main_exts = tuple(e for e in self.extensions
+                              if e.name not in self.pair_names)
+            cfg_s = dataclasses.replace(self.cfg, shard_axes=axes)
+
+            def body(p, x, y, key, t_off):
+                n_local = jax.tree.leaves(x)[0].shape[0]
+                off = t_off + _global_sample_offset(axes, n_local)
+                cfg_i = dataclasses.replace(cfg_s, sample_offset=off)
+                res = run(self.model, p, x, y, self.loss,
+                          extensions=main_exts, cfg=cfg_i, rng=key)
+                return (res.loss, res.grads,
+                        {nm: res.ext[nm] for nm in self.carry_names},
+                        res.logits,
+                        {nm: res.ext[nm] for nm in self.concat_names})
+
+            out_specs = (P(), P(), {nm: P() for nm in self.carry_names},
+                         batch, {nm: batch for nm in self.concat_names})
+            self._jit_cache["sharded"] = jax.jit(_shard_map(
+                body, mesh=sp.mesh, in_specs=(P(), batch, batch, P(), P()),
+                out_specs=out_specs, check_rep=False))
+        return self._jit_cache["sharded"]
+
+    def _pair_diag(self):
+        if "pair_diag" not in self._jit_cache:
+            def f(params, rng, x_i, y_i, off):
+                cfg_i = dataclasses.replace(self.cfg, sample_offset=off)
+                res = run(self.model, params, x_i, y_i, self.loss,
+                          extensions=self._pair_exts, cfg=cfg_i, rng=rng)
+                return {nm: res.ext[nm] for nm in self.pair_names}
+
+            self._jit_cache["pair_diag"] = jax.jit(f)
+        return self._jit_cache["pair_diag"]
+
+    def _do_slice(self, t):
+        lo = t * self.m
+        rows = self.m if t < self.k_full else self.rem
+
+        def cut(a):
+            return a[lo:lo + rows]
+
+        x_i = jax.tree.map(cut, self.inputs)
+        y_i = jax.tree.map(cut, self.targets)
+        off = jnp.int32(lo)
+        if self._use_shard_map(rows):
+            lv, g, carry, z, rows_ext = self._sharded_slice()(
+                self.params, x_i, y_i, self.rng, off)
+            pair = (self._pair_diag()(self.params, self.rng, x_i, y_i, off)
+                    if self.pair_names else {})
+        else:
+            lv, g, carry, z, rows_ext, pair = self._slice_jit(
+                self.params, self.rng, x_i, y_i, off)
+
+        st = self.state
+        # Weights are *global* slice rows against a global total batch —
+        # the same w_t / N ratios as the in-scan lanes, but independent of
+        # the mesh, so folds commute with elastic re-sharding.
+        meta = {"weight": float(rows)}
+        st["loss"] = st["loss"] + lv
+        st["grads"] = jax.tree.map(jnp.add, st["grads"], g)
+        st["carry"] = {nm: self.red[nm].update(st["carry"][nm], carry[nm],
+                                               meta)
+                       for nm in self.carry_names}
+
+        def put(buf, v):
+            return buf.at[lo:lo + rows].set(v.astype(buf.dtype))
+
+        st["logits"] = jax.tree.map(put, st["logits"], z)
+        st["rows"] = {nm: jax.tree.map(put, st["rows"][nm], rows_ext[nm])
+                      for nm in self.concat_names}
+
+        def put_diag(buf, blk):
+            return buf.at[lo:lo + rows, lo:lo + rows].set(
+                blk.astype(buf.dtype))
+
+        st["pair"] = {nm: jax.tree.map(put_diag, st["pair"][nm], pair[nm])
+                      for nm in self.pair_names}
+
+    def _pair_fn(self, rows_q):
+        key = ("pair", rows_q)
+        if key not in self._jit_cache:
+            m = self.m
+
+            def f(params, rng, inputs, targets, off_p, off_q):
+                def cut(a):
+                    ap = jax.lax.dynamic_slice_in_dim(a, off_p, m, 0)
+                    aq = jax.lax.dynamic_slice_in_dim(a, off_q, rows_q, 0)
+                    return jnp.concatenate([ap, aq], 0)
+
+                cfg_p = dataclasses.replace(self.cfg, sample_offset=0,
+                                            cross_split=m)
+                res = run(self.model, params, jax.tree.map(cut, inputs),
+                          jax.tree.map(cut, targets), self.loss,
+                          extensions=self._pair_exts, cfg=cfg_p, rng=rng)
+                return {nm: res.ext[nm] for nm in self.pair_names}
+
+            self._jit_cache[key] = jax.jit(f)
+        return self._jit_cache[key]
+
+    def _do_pair(self, off_p, off_q, rows_q):
+        pext = self._pair_fn(rows_q)(self.params, self.rng, self.inputs,
+                                     self.targets, jnp.int32(off_p),
+                                     jnp.int32(off_q))
+        st = self.state
+
+        def put(buf, blk):
+            tail0 = (0,) * (buf.ndim - 2)
+            buf = jax.lax.dynamic_update_slice(
+                buf, blk.astype(buf.dtype), (off_p, off_q) + tail0)
+            bot = GramReducer.transpose_block(blk).astype(buf.dtype)
+            return jax.lax.dynamic_update_slice(
+                buf, bot, (off_q, off_p) + tail0)
+
+        st["pair"] = {nm: jax.tree.map(put, st["pair"][nm], pext[nm])
+                      for nm in self.pair_names}
+
+    # -- snapshots ----------------------------------------------------------
+
+    def state_arrays(self):
+        """The checkpoint payload: ``self.state`` with every reducer
+        accumulator passed through :meth:`Reducer.serialize` — a pytree
+        of arrays with stable structure and leaf shapes across the whole
+        stream lifetime (what the checkpoint layer validates against)."""
+        st = dict(self.state)
+        st["carry"] = {nm: self.red[nm].serialize(self.state["carry"][nm])
+                       for nm in self.carry_names}
+        return st
+
+    def schedule_meta(self) -> dict:
+        """JSON-able schedule invariants saved next to each snapshot.
+
+        Everything a resumed stream must rebuild identically — batch
+        rows, slice schedule, extension set, loss, MC configuration and
+        the PRNG key data.  ``n_shards`` is informational only: elastic
+        resume legitimately changes it.
+        """
+        try:
+            key_data = jax.random.key_data(self.rng)
+        except (TypeError, AttributeError):
+            key_data = self.rng
+        return {
+            "n": int(self.n),
+            "num_microbatches": int(self.plan.num_microbatches),
+            "slice_rows": int(self.m),
+            "work_units": len(self.units),
+            "extensions": sorted(self.plan.plan.names),
+            "loss": type(self.loss).__name__,
+            "mc_samples": int(self.cfg.mc_samples),
+            "rng": [int(v) for v in
+                    jax.device_get(key_data).ravel().tolist()],
+            "n_shards": int(self.n_shards),
+        }
+
+    _ELASTIC_META = ("n_shards",)
+
+    def check_meta(self, meta: dict) -> None:
+        """Validate a snapshot's schedule metadata against this stream —
+        raises ``ValueError`` naming the first mismatching field."""
+        here = self.schedule_meta()
+        for field, now in here.items():
+            if field in self._ELASTIC_META or field not in meta:
+                continue
+            if meta[field] != now:
+                raise ValueError(
+                    "sweep snapshot does not match this stream: field "
+                    f"{field!r} was {meta[field]!r} at save time but is "
+                    f"{now!r} now — resume must rebuild the stream with "
+                    "the identical batch, microbatch schedule, "
+                    "extensions, loss and rng/mc_seed (only the device "
+                    "mesh may change)")
+
+    def load_state(self, cursor, arrays, meta: Optional[dict] = None):
+        """Restore a snapshot: cursor + serialized state (+ validated
+        schedule metadata, when the checkpointer kept it)."""
+        if meta is not None:
+            self.check_meta(meta)
+        cursor = int(cursor)
+        if not 0 <= cursor <= len(self.units):
+            raise ValueError(
+                f"sweep snapshot cursor {cursor} outside this stream's "
+                f"schedule of {len(self.units)} work units")
+        # Snapshots come back as host (numpy) arrays — re-ingest onto the
+        # current backend before folding continues.
+        arrays = dict(jax.tree.map(jnp.asarray, arrays))
+        arrays["carry"] = {nm: self.red[nm].deserialize(
+                               arrays["carry"][nm])
+                           for nm in self.carry_names}
+        self.state = arrays
+        self._cursor = cursor
+
+    # -- finalize -----------------------------------------------------------
+
+    def result(self) -> Results:
+        """Finalize every accumulator — only valid once ``done``."""
+        if not self.done:
+            raise ValueError(
+                f"sweep stream incomplete ({self._cursor}/"
+                f"{len(self.units)} work units) — drive step() to "
+                "completion (or use run_checkpointed) before result()")
+        st = self.state
+        meta_fin = {"total_batch": float(self.n),
+                    "total_units": self.cfg.total_units}
+        if "kfra" in self.carry_names:
+            meta_fin["replay"] = lambda gbar, parts: _merge_stat_trees(
+                self.model.kfra_apply(self.params, gbar, parts,
+                                      self.extensions, self.cfg)[1],
+                "kfra")
+        ext = {}
+        for nm in self.carry_names:
+            ext[nm] = self.red[nm].finalize(st["carry"][nm], meta_fin)
+        ext.update(st["rows"])
+        for nm in self.pair_names:
+            ext[nm] = st["pair"][nm]
+        return Results(loss=st["loss"], grads=st["grads"],
+                       logits=st["logits"], ext=ext)
 
 
 def run(

@@ -47,6 +47,15 @@ switches):
     emitted blocks (see ``engine._run_accumulated``).  The streaming
     algebra is block-scatter-into-zeros + elementwise add — associative
     and commutative because blocks are disjoint.
+``supports_checkpoint``
+    The accumulator state round-trips through ``serialize`` /
+    ``deserialize`` as a pytree of arrays, so a checkpointable streaming
+    sweep (``engine.SweepStream``) can snapshot it mid-run and restore
+    it — possibly in a different process, on a different device mesh —
+    and continue folding with ``update``/``merge``.  Third-party
+    reducers whose accumulator holds non-array state (open files,
+    device-pinned buffers) set this False and are rejected by the
+    checkpointed driver with an actionable error.
 """
 from __future__ import annotations
 
@@ -172,6 +181,7 @@ class Reducer:
 
     name = "psum"
     supports_streaming = True
+    supports_checkpoint = True
     local_rows = False
     streams_rows = False
     pairwise = False
@@ -208,6 +218,29 @@ class Reducer:
         carries ``total_batch`` / ``total_units`` (and, for reducers that
         replay model structure, driver-provided callbacks)."""
         return acc
+
+    # -- checkpointing (preemption-safe streaming sweeps) -------------------
+    def serialize(self, acc):
+        """Accumulator → a pytree of arrays for a checkpoint snapshot.
+
+        The default is the identity: every built-in reducer's
+        accumulator already *is* a pytree of arrays (running sums, kron
+        factor trees, Chan ``{'n','mean','m2'}`` triples, KFRA
+        ``{'gbar','partials'}`` pairs).  Override when the live
+        accumulator carries anything a ``save``/``restore`` round trip
+        through host arrays cannot represent; the serialized form must
+        have a stable tree structure and leaf shapes across the whole
+        sweep (the checkpoint layer validates both on restore).
+        """
+        return acc
+
+    def deserialize(self, payload):
+        """Inverse of :meth:`serialize` — restored arrays → a live
+        accumulator ``update``/``merge``/``finalize`` can keep folding.
+        The restored state may land on a different device mesh than it
+        was saved from; built-in accumulators are replicated host-side
+        values, so the identity default is elastic for free."""
+        return payload
 
 
 class PsumReducer(Reducer):

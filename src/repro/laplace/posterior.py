@@ -78,7 +78,8 @@ def _likelihood_of(loss) -> str:
 
 
 def _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
-               mesh, shard_axes, microbatch_size=None):
+               mesh, shard_axes, microbatch_size=None, ckpt_dir=None,
+               resume=False, checkpoint_every=1, injector=None):
     """One engine sweep — single-device, batch-sharded over ``mesh``,
     and/or streamed over microbatches.
 
@@ -90,12 +91,37 @@ def _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
     additionally routes through ``SweepPlan.accumulate`` — the posterior
     curvature is folded sequentially over ``ceil(N / microbatch_size)``
     slices, so posterior fitting runs at LM-scale batches on one device.
+
+    With ``ckpt_dir`` the accumulated sweep additionally runs
+    preemption-safely (``AccumulatedSweepPlan.run_checkpointed``):
+    accumulator snapshots land in ``ckpt_dir`` every
+    ``checkpoint_every`` work units and ``resume=True`` restarts a
+    killed fit at the interrupted slice — the refitted posterior is
+    identical to an uninterrupted one.  Checkpointing requires the
+    streaming lane: a monolithic or purely sharded fit has no slice
+    boundaries to snapshot at, so asking for one raises
+    :class:`LaplaceStructureError`.
     """
     n = jax.tree.leaves(x)[0].shape[0]
     plan = eng.plan_for_batch(extensions, cfg, n, mesh=mesh,
                               shard_axes=shard_axes,
                               microbatch_size=microbatch_size)
-    return plan.run(model, params, x, y, loss, cfg=cfg, rng=rng)
+    if ckpt_dir is None:
+        return plan.run(model, params, x, y, loss, cfg=cfg, rng=rng)
+    if not isinstance(plan, eng.AccumulatedSweepPlan):
+        raise LaplaceStructureError(
+            "laplace: ckpt_dir needs the streaming accumulated sweep "
+            "lane — pass microbatch_size (or cfg.microbatch_size) small "
+            "enough to split the fit batch into more than one slice, so "
+            "the sweep has checkpointable work units "
+            f"(plan: {plan.describe()})")
+    from repro.train.checkpoint import SweepCheckpointer
+
+    return plan.run_checkpointed(
+        model, params, x, y, loss, cfg=cfg, rng=rng,
+        checkpointer=SweepCheckpointer(ckpt_dir),
+        checkpoint_every=checkpoint_every, injector=injector,
+        resume=resume)
 
 
 def _is_kron_block(node) -> bool:
@@ -228,12 +254,15 @@ class DiagLaplace(_EvidenceMixin):
     def fit(cls, model, params, x, y, loss, *, mc: bool = False,
             prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
             rng=None, extensions=None, mesh=None, shard_axes=("data",),
-            microbatch_size: Optional[int] = None):
+            microbatch_size: Optional[int] = None, ckpt_dir=None,
+            resume: bool = False, checkpoint_every: int = 1,
+            injector=None):
         cfg, extensions, rng = _fit_args(
             cfg, extensions, rng, mc, default=(DiagGGNMC,) if mc else (DiagGGN,))
         _require_structure("diag", extensions, cfg)
         res = _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
-                         mesh, shard_axes, microbatch_size)
+                         mesh, shard_axes, microbatch_size, ckpt_dir,
+                         resume, checkpoint_every, injector)
         name = "diag_ggn_mc" if "diag_ggn_mc" in res.ext else "diag_ggn"
         curv = res.ext[name]
         try:
@@ -321,12 +350,15 @@ class KronLaplace(_EvidenceMixin):
     def fit(cls, model, params, x, y, loss, *, mc: bool = False,
             prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
             rng=None, extensions=None, mesh=None, shard_axes=("data",),
-            microbatch_size: Optional[int] = None):
+            microbatch_size: Optional[int] = None, ckpt_dir=None,
+            resume: bool = False, checkpoint_every: int = 1,
+            injector=None):
         cfg, extensions, rng = _fit_args(
             cfg, extensions, rng, mc, default=(KFAC,) if mc else (KFLR,))
         _require_structure("kron", extensions, cfg)
         res = _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
-                         mesh, shard_axes, microbatch_size)
+                         mesh, shard_axes, microbatch_size, ckpt_dir,
+                         resume, checkpoint_every, injector)
         name = "kfac" if "kfac" in res.ext else "kflr"
         kron_tree = res.ext[name]
         # Validate coverage (and surface the actionable message now, not at
@@ -558,9 +590,13 @@ def fit_posterior(model, params, x, y, loss, *, structure: str = "diag",
         Forwarded to the structure's ``fit``: ``mc=True`` for the
         Monte-Carlo factorization (Eq. 20), ``prior_prec``, ``cfg``
         (``ExtensionConfig``), ``rng``, ``mesh``/``shard_axes`` for the
-        batch-sharded sweep, and ``microbatch_size`` for the streaming
+        batch-sharded sweep, ``microbatch_size`` for the streaming
         accumulated sweep (posterior fits at batches beyond device
-        memory).
+        memory), and — streaming only — ``ckpt_dir`` /
+        ``checkpoint_every`` / ``resume`` for a preemption-safe fit
+        whose accumulator snapshots restart a killed sweep at the
+        interrupted slice (``injector`` hooks a
+        ``repro.train.fault.FailureInjector`` in for tests).
 
     Returns
     -------

@@ -13,7 +13,7 @@ from repro.configs import SHAPES, get_config
 from repro.core import DiagGGNMC, ExtensionConfig, KFAC, Variance
 from repro.nn.models import build_model
 from repro.optim import adamw, curvature_optimizer, momentum_sgd
-from repro.train.loop import LoopConfig, fit
+from repro.train.loop import LoopConfig, fit, fit_with_restarts
 
 
 def main():
@@ -28,6 +28,16 @@ def main():
     ap.add_argument("--damping", type=float, default=1e-1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="newest checkpoints retained in --ckpt (>= 1)")
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="run under the restart driver: any fault restores "
+                         "the latest checkpoint and retries, up to this "
+                         "many times (needs --ckpt)")
+    ap.add_argument("--fail-at-step", type=int, default=None,
+                    help="inject a failure at this step (exercises the "
+                         "checkpoint/restart path end-to-end; pair with "
+                         "--max-restarts)")
     ap.add_argument("--full", action="store_true",
                     help="full-size config (pod-scale; not for CPU)")
     ap.add_argument("--track-variance", action="store_true")
@@ -79,10 +89,26 @@ def main():
         mesh = make_data_mesh()
         print(f"[shard-sweep] data mesh over {mesh.shape['data']} device(s)")
 
-    loop = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt, log_every=10)
-    _, _, hist, wd = fit(model, cfg, shape, opt, loop, extensions=extensions,
-                         ext_cfg=ext_cfg, resume=args.resume, track=track,
-                         mesh=mesh)
+    loop = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt, log_every=10,
+                      ckpt_keep=args.ckpt_keep)
+    injector = None
+    if args.fail_at_step is not None:
+        from repro.train.fault import FailureInjector
+
+        injector = FailureInjector(fail_at_step=args.fail_at_step)
+        print(f"[fault] injecting failure at step {args.fail_at_step}")
+    if args.max_restarts > 0:
+        (_, _, hist, wd), restarts = fit_with_restarts(
+            model, cfg, shape, opt, loop, max_restarts=args.max_restarts,
+            on_restart=lambda i, e: print(f"[restart {i}] after: {e}"),
+            extensions=extensions, ext_cfg=ext_cfg, track=track, mesh=mesh,
+            injector=injector)
+        print(f"[fault] completed with {restarts} restart(s)")
+    else:
+        _, _, hist, wd = fit(model, cfg, shape, opt, loop,
+                             extensions=extensions, ext_cfg=ext_cfg,
+                             resume=args.resume, track=track, mesh=mesh,
+                             injector=injector)
     print(f"final loss {hist[-1]['loss']:.4f} "
           f"(stragglers flagged: {len(wd.straggler_steps)})")
 

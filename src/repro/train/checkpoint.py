@@ -25,6 +25,12 @@ def _flatten(tree):
 
 
 def save(path, step, params, opt_state=None, extra=None, keep=3):
+    if keep < 1:
+        # Fail before any disk work: keep=0 used to slice steps[:-0] == []
+        # in _gc and silently keep everything; a save must always retain
+        # at least the checkpoint it is about to write.
+        raise ValueError(f"keep must be >= 1 (got {keep}) — a save always "
+                         "retains at least the checkpoint it just wrote")
     os.makedirs(path, exist_ok=True)
     state = {"params": params}
     if opt_state is not None:
@@ -54,12 +60,32 @@ def save(path, step, params, opt_state=None, extra=None, keep=3):
 
 
 def _gc(path, keep):
+    """Prune to the newest ``keep`` checkpoints and sweep crash debris.
+
+    ``keep`` must be >= 1: the slice below would turn ``keep=0`` into
+    ``steps[:-0] == []`` and silently keep everything, so the degenerate
+    value is rejected instead of misread (delete-all is never what a
+    retention policy means mid-save).
+
+    Stale ``.tmp_save_*`` directories are also removed here: a process
+    killed between ``mkdtemp`` and the atomic rename leaves its tmp dir
+    behind forever (the in-process cleanup only covers exceptions), and
+    they are invisible to the ``step_*`` pruning above — any tmp dir
+    still present when a later save garbage-collects is by construction
+    an orphan (the current save renamed its own away first).
+    """
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1 (got {keep})")
     steps = sorted(
         d for d in os.listdir(path)
         if d.startswith("step_") and os.path.isdir(os.path.join(path, d))
     )
     for d in steps[:-keep]:
         shutil.rmtree(os.path.join(path, d), ignore_errors=True)
+    for d in os.listdir(path):
+        if d.startswith(".tmp_save_") and os.path.isdir(
+                os.path.join(path, d)):
+            shutil.rmtree(os.path.join(path, d), ignore_errors=True)
 
 
 def latest_step(path):
@@ -89,9 +115,33 @@ def restore(path, step, params_like, opt_like=None, shardings=None):
         raise ValueError(
             f"checkpoint has {manifest['n_arrays']} arrays; target structure "
             f"expects {len(flat_like)} — config mismatch?")
+    # Leaf count alone would happily zip a same-length but differently
+    # shaped target into the wrong leaves (and the dtype cast below would
+    # mask the drift): require the recorded tree structure and validate
+    # every leaf's shape, naming the first offender.
+    saved_treedef = manifest.get("treedef")
+    if saved_treedef is not None and saved_treedef != str(treedef):
+        raise ValueError(
+            "checkpoint tree structure does not match the target "
+            f"structure ({manifest['n_arrays']} leaves in both — config "
+            "mismatch?)\n"
+            f"  saved:  {saved_treedef}\n"
+            f"  target: {treedef}")
+    flat_paths = [
+        jax.tree_util.keystr(kp)
+        for kp, _ in jax.tree_util.tree_flatten_with_path(state_like)[0]
+    ]
     flat = []
     for i, l in enumerate(flat_like):
         arr = np.asarray(data[f"a{i}"])
+        want = tuple(getattr(l, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(
+                f"checkpoint leaf {flat_paths[i]!r} (array {i} of "
+                f"step_{int(step):08d}) has shape {tuple(arr.shape)}; the "
+                f"target structure expects {want} — first mismatching "
+                "leaf; was the model/optimizer config changed between "
+                "save and restore?")
         if hasattr(l, "dtype"):
             arr = arr.astype(l.dtype)
         flat.append(arr)
@@ -105,3 +155,54 @@ def restore(path, step, params_like, opt_like=None, shardings=None):
     if opt_like is not None:
         out.insert(1, state["opt"])
     return tuple(out)
+
+
+class SweepCheckpointer:
+    """On-disk snapshot store for preemption-safe sweep streams.
+
+    The duck-typed checkpointer ``repro.core.engine`` drives (core never
+    imports train, so the engine only sees this interface):
+
+    * ``save(cursor, state, meta)`` — snapshot a
+      ``SweepStream.state_arrays()`` pytree at work-unit ``cursor``,
+      with the stream's ``schedule_meta()`` dict riding in the manifest.
+    * ``restore_latest(state_like) -> (cursor, state, meta) | None`` —
+      load the newest snapshot into the structure of ``state_like``
+      (``None`` on a cold start).
+
+    Snapshots reuse the module's atomic ``step_<cursor>`` layout, so
+    they inherit the crash-safe rename, keep-k pruning, tmp-dir sweeping
+    and strict treedef/shape validation above.  Arrays are stored
+    device-agnostic; re-ingestion onto the resuming process's (possibly
+    different) mesh happens in ``SweepStream.load_state`` — elastic
+    re-sharding for sweeps.
+
+    Parameters
+    ----------
+    path : str
+        Snapshot directory (created on first save).
+    keep : int
+        Newest snapshots retained (>= 1); 2 by default so one corrupt
+        final write still leaves a resumable predecessor.
+    """
+
+    def __init__(self, path, keep: int = 2):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1 (got {keep})")
+        self.path = str(path)
+        self.keep = int(keep)
+
+    def save(self, cursor, state, meta=None):
+        return save(self.path, int(cursor), jax.device_get(state),
+                    extra={"sweep": meta or {}}, keep=self.keep)
+
+    def latest(self):
+        """Newest snapshot cursor, or None when no snapshot exists."""
+        return latest_step(self.path)
+
+    def restore_latest(self, state_like):
+        cursor = latest_step(self.path)
+        if cursor is None:
+            return None
+        state, manifest = restore(self.path, cursor, state_like)
+        return cursor, state, manifest.get("extra", {}).get("sweep", {})

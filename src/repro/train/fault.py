@@ -79,3 +79,51 @@ def run_with_restarts(make_and_run: Callable[[Optional[int]], int],
             if on_restart is not None:
                 on_restart(restarts, e)
             resume = -1  # sentinel: restore from latest
+
+
+def run_sweep_with_restarts(plan, model, params, inputs, targets, loss,
+                            checkpointer, *, cfg=None, rng=None,
+                            checkpoint_every: int = 1,
+                            max_restarts: int = 3, injector=None,
+                            on_restart=None):
+    """Drive a checkpointed sweep to completion across failures.
+
+    The sweep-level sibling of :func:`run_with_restarts`: each attempt
+    calls ``plan.run_checkpointed(..., resume=True)`` — the first attempt
+    is a cold start, every retry restores the latest snapshot from
+    ``checkpointer`` and continues at the interrupted work unit, so the
+    finished Results are identical to an uninterrupted sweep (the
+    resume-exactness contract of ``repro.core.engine.SweepStream``).
+    Because snapshots are mesh-elastic, a retry may even bring up a
+    different device mesh (rebuild ``plan`` accordingly before calling).
+
+    Parameters
+    ----------
+    plan : repro.core.AccumulatedSweepPlan
+        The streaming sweep to run (optionally sharded).
+    checkpointer : repro.train.checkpoint.SweepCheckpointer
+        Snapshot store shared by every attempt.
+    injector : FailureInjector, optional
+        Deterministic mid-stream kill for tests (checked per work unit).
+    on_restart : callable, optional
+        ``on_restart(restart_index, exception)`` before each retry.
+
+    Returns
+    -------
+    (Results, int)
+        The finished sweep results and the number of restarts taken.
+    """
+    restarts = 0
+    while True:
+        try:
+            res = plan.run_checkpointed(
+                model, params, inputs, targets, loss, cfg=cfg, rng=rng,
+                checkpointer=checkpointer, checkpoint_every=checkpoint_every,
+                injector=injector, resume=True)
+            return res, restarts
+        except Exception as e:  # noqa: BLE001 — any fault triggers restart
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(restarts, e)

@@ -26,6 +26,7 @@ class LoopConfig:
     steps: int = 100
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
+    ckpt_keep: int = 3      # newest checkpoints retained (must be >= 1)
     log_every: int = 10
     seed: int = 0
     batch_override: Optional[int] = None
@@ -116,10 +117,33 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
             log_fn(f"step {step:5d} loss {metrics['loss']:.4f} "
                    f"({dur*1e3:.0f} ms)")
         if loop.ckpt_dir and (step + 1) % loop.ckpt_every == 0:
-            ckpt.save(loop.ckpt_dir, step + 1, params, opt_state)
+            ckpt.save(loop.ckpt_dir, step + 1, params, opt_state,
+                      keep=loop.ckpt_keep)
     if loop.ckpt_dir:
-        ckpt.save(loop.ckpt_dir, loop.steps, params, opt_state)
+        ckpt.save(loop.ckpt_dir, loop.steps, params, opt_state,
+                  keep=loop.ckpt_keep)
     return params, opt_state, history, wd
+
+
+def fit_with_restarts(model, cfg, shape, opt, loop: LoopConfig,
+                      max_restarts: int = 3, on_restart=None, **kw):
+    """:func:`fit` under the restart driver: any fault (injected or real)
+    triggers restore-from-latest-checkpoint + retry, up to
+    ``max_restarts``.  ``loop.ckpt_dir`` must be set — without it a
+    restart would silently retrain from scratch.  Returns
+    ``((params, opt_state, history, watchdog), restarts)``."""
+    if not loop.ckpt_dir:
+        raise ValueError("fit_with_restarts needs loop.ckpt_dir — a "
+                         "restart without checkpoints retrains from "
+                         "scratch")
+    from repro.train.fault import run_with_restarts
+
+    def make_and_run(resume):
+        return fit(model, cfg, shape, opt, loop,
+                   resume=resume is not None, **kw)
+
+    return run_with_restarts(make_and_run, max_restarts=max_restarts,
+                             on_restart=on_restart)
 
 
 def _marglik_callback(model, params, batch, loss, loop: LoopConfig, step,

@@ -1,0 +1,397 @@
+"""Preemption-safe streaming sweeps: interrupt/resume exactness and the
+checkpoint-layer fixes underneath.
+
+The contract under test: a sweep killed mid-stream by ``FailureInjector``
+and resumed from its ``SweepCheckpointer`` snapshot produces results
+identical (3e-5, the monolithic-vs-accumulated differential tolerance) to
+the uninterrupted run — including deterministic ``mc_seed`` MC draws and
+the Variance reducer's Chan ``(n, mean, M2)`` triples — on both the
+single-device accumulated lane and the shard × accumulate grid, plus the
+elastic N→M-device resume (multidevice lane).  The satellite regression
+tests cover ``train/checkpoint.py``: stale ``.tmp_save_*`` sweeping,
+``keep < 1`` rejection, and treedef/per-leaf-shape restore validation.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Activation,
+    CrossEntropyLoss,
+    Dense,
+    Extension,
+    ExtensionConfig,
+    Reducer,
+    Sequential,
+    by_name,
+    plan_sweeps,
+)
+from repro.launch.mesh import make_data_mesh
+from repro.train import checkpoint as ckpt
+from repro.train.checkpoint import SweepCheckpointer
+from repro.train.fault import (
+    FailureInjector,
+    SimulatedFailure,
+    run_sweep_with_restarts,
+)
+
+N, D_IN, H, C = 10, 6, 7, 4
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+# One extension per accumulator family: psum rows/concat (batch_grad,
+# batch_l2), the Chan moment triple (variance), MC factor draws
+# (diag_ggn_mc + kfac — keyed per global sample index), kron, the KFRA
+# pmean/replay chain, and both pairwise row-block streams (batch_dot, ntk).
+EXTS = ("batch_grad", "batch_l2", "variance", "diag_ggn_mc", "kfac",
+        "kfra", "batch_dot", "ntk")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = Sequential([Dense(D_IN, H), Activation("sigmoid"), Dense(H, C)])
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (N, D_IN))
+    y = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, C)
+    return model, params, x, y
+
+
+def _plan(k=3, mesh=None):
+    cfg = ExtensionConfig(mc_seed=7)
+    plan = plan_sweeps(tuple(by_name(n) for n in EXTS), cfg)
+    if mesh is not None:
+        plan = plan.shard(mesh)
+    return plan.accumulate(k), cfg
+
+
+def _assert_results_match(ref, res, names=EXTS, label=""):
+    np.testing.assert_allclose(ref.loss, res.loss, err_msg=f"{label}loss",
+                               **TOL)
+    for part in ("grads", "logits"):
+        for u, v in zip(jax.tree.leaves(getattr(ref, part)),
+                        jax.tree.leaves(getattr(res, part))):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       err_msg=f"{label}{part}", **TOL)
+    for nm in names:
+        for u, v in zip(jax.tree.leaves(ref.ext[nm]),
+                        jax.tree.leaves(res.ext[nm])):
+            np.testing.assert_allclose(np.asarray(u), np.asarray(v),
+                                       err_msg=f"{label}{nm}", **TOL)
+
+
+# ---------------------------------------------------------------------------
+# the stream lane itself (no faults): slice schedule == scan lane
+# ---------------------------------------------------------------------------
+
+
+def test_stream_matches_accumulated_scan(setup):
+    """run_checkpointed without a checkpointer is just the stepwise
+    executor — it must match the in-scan accumulated lane (and hence the
+    monolithic sweep) for every accumulator family at once."""
+    model, params, x, y = setup
+    plan, cfg = _plan(k=3)
+    ref = plan.run(model, params, x, y, CrossEntropyLoss(), cfg=cfg)
+    res = plan.run_checkpointed(model, params, x, y, CrossEntropyLoss(),
+                                cfg=cfg)
+    _assert_results_match(ref, res)
+
+
+def test_stream_state_is_arrays_only(setup):
+    """Snapshots must be pure array pytrees (that is what makes them
+    checkpointable); the cursor lives outside as the step number."""
+    model, params, x, y = setup
+    plan, cfg = _plan(k=3)
+    stream = plan.stream(model, params, x, y, CrossEntropyLoss(), cfg=cfg)
+    stream.step()
+    for leaf in jax.tree.leaves(stream.state_arrays()):
+        assert hasattr(leaf, "shape") and hasattr(leaf, "dtype"), leaf
+    meta = stream.schedule_meta()
+    import json
+
+    json.dumps(meta)  # manifest-safe
+    assert meta["n"] == N and meta["work_units"] == stream.num_units
+
+
+def test_variance_chan_triple_rides_the_snapshot(setup):
+    """The Variance accumulator snapshots as raw mergeable Chan triples
+    — n/mean/M2 leaves, not a finalized variance — so a resumed fold
+    continues the merge algebra exactly."""
+    model, params, x, y = setup
+    plan, cfg = _plan(k=3)
+    stream = plan.stream(model, params, x, y, CrossEntropyLoss(), cfg=cfg)
+    stream.step()
+    carry = stream.state_arrays()["carry"]["variance"]
+
+    def keys(node):
+        if isinstance(node, dict) and set(node) == {"n", "mean", "m2"}:
+            found.append(node)
+        elif isinstance(node, dict):
+            for v in node.values():
+                keys(v)
+        elif isinstance(node, (tuple, list)):
+            for v in node:
+                keys(v)
+
+    found = []
+    keys(carry)
+    assert found, f"no Chan triples in variance carry: {carry!r}"
+    # after one m-row slice the folded count must be that slice's rows
+    assert float(jax.tree.leaves(found[0]["n"])[0]) == float(stream.m)
+
+
+# ---------------------------------------------------------------------------
+# interrupt + resume differentials (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fail_at", [1, 2, 4])
+def test_interrupt_resume_exact_single_device(setup, tmp_path, fail_at):
+    """Kill the stream at work unit ``fail_at`` (slice and pair-pass
+    cursors both covered), resume from disk, and match the uninterrupted
+    run exactly — MC draws and Chan triples included."""
+    model, params, x, y = setup
+    plan, cfg = _plan(k=3)
+    loss = CrossEntropyLoss()
+    ref = plan.run_checkpointed(model, params, x, y, loss, cfg=cfg)
+    store = SweepCheckpointer(str(tmp_path / "sweep"))
+    with pytest.raises(SimulatedFailure):
+        plan.run_checkpointed(model, params, x, y, loss, cfg=cfg,
+                              checkpointer=store,
+                              injector=FailureInjector(fail_at_step=fail_at))
+    assert store.latest() == fail_at  # snapshot cadence: every unit
+    res = plan.resume(model, params, x, y, loss, store, cfg=cfg)
+    _assert_results_match(ref, res, label=f"fail@{fail_at}:")
+
+
+def test_interrupt_resume_exact_grid(setup, tmp_path):
+    """Same differential on the shard × accumulate grid (a genuine
+    multi-shard mesh in the multidevice lane, 1-device elsewhere)."""
+    model, params, x, y = setup
+    mesh = make_data_mesh()
+    n_dev = mesh.shape["data"]
+    n = 16 if 16 % n_dev == 0 else 8 * n_dev
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, D_IN))
+    y = jax.random.randint(jax.random.PRNGKey(2), (n,), 0, C)
+    plan, cfg = _plan(k=2, mesh=mesh)
+    loss = CrossEntropyLoss()
+    mono = plan_sweeps(tuple(by_name(nm) for nm in EXTS), cfg).run(
+        model, params, x, y, loss, cfg=cfg)
+    store = SweepCheckpointer(str(tmp_path / "sweep"))
+    with pytest.raises(SimulatedFailure):
+        plan.run_checkpointed(model, params, x, y, loss, cfg=cfg,
+                              checkpointer=store,
+                              injector=FailureInjector(fail_at_step=1))
+    res = plan.resume(model, params, x, y, loss, store, cfg=cfg)
+    _assert_results_match(mono, res, label="grid:")
+
+
+def _elastic_resume_body(tmp_dir):
+    """Checkpoint on an N-device mesh, resume on N/2 devices: the
+    snapshot is mesh-agnostic, so the resumed sweep still matches the
+    monolithic single-device run."""
+    model = Sequential([Dense(D_IN, H), Activation("sigmoid"), Dense(H, C)])
+    params = model.init(jax.random.PRNGKey(0))
+    n_dev = len(jax.devices())
+    n = 4 * n_dev
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, D_IN))
+    y = jax.random.randint(jax.random.PRNGKey(2), (n,), 0, C)
+    loss = CrossEntropyLoss()
+    plan_n, cfg = _plan(k=2, mesh=make_data_mesh(n_dev))
+    plan_m, _ = _plan(k=2, mesh=make_data_mesh(n_dev // 2))
+    mono = plan_sweeps(tuple(by_name(nm) for nm in EXTS), cfg).run(
+        model, params, x, y, loss, cfg=cfg)
+    store = SweepCheckpointer(os.path.join(tmp_dir, "sweep"))
+    with pytest.raises(SimulatedFailure):
+        plan_n.run_checkpointed(model, params, x, y, loss, cfg=cfg,
+                                checkpointer=store,
+                                injector=FailureInjector(fail_at_step=1))
+    res = plan_m.resume(model, params, x, y, loss, store, cfg=cfg)
+    _assert_results_match(mono, res, label="elastic:")
+
+
+def test_elastic_resume_n_to_m_devices(tmp_path):
+    """Elastic resume, on real shards: in-process when this lane already
+    has >= 2 devices (the multidevice CI lane), otherwise in a fresh
+    4-virtual-device subprocess (jax locks the device count at first
+    init, so a single-device process cannot host it directly)."""
+    if len(jax.devices()) >= 2:
+        _elastic_resume_body(str(tmp_path))
+        return
+    import subprocess
+    import sys
+
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    code = (
+        "import sys; sys.path.insert(0, {src!r}); "
+        "sys.path.insert(0, {here!r}); "
+        "import test_resume; "
+        "test_resume._elastic_resume_body({tmp!r}); "
+        "print('ELASTIC_OK')"
+    ).format(src=src, here=os.path.dirname(os.path.abspath(__file__)),
+             tmp=str(tmp_path))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ELASTIC_OK" in out.stdout
+
+
+def test_run_sweep_with_restarts(setup, tmp_path):
+    """The fault-driver wrapper: one injected kill → one restart, exact
+    results, restart count reported."""
+    model, params, x, y = setup
+    plan, cfg = _plan(k=3)
+    loss = CrossEntropyLoss()
+    ref = plan.run(model, params, x, y, loss, cfg=cfg)
+    res, restarts = run_sweep_with_restarts(
+        plan, model, params, x, y, loss,
+        SweepCheckpointer(str(tmp_path / "sweep")), cfg=cfg,
+        injector=FailureInjector(fail_at_step=2))
+    assert restarts == 1
+    _assert_results_match(ref, res)
+
+
+def test_resume_validates_schedule_meta(setup, tmp_path):
+    """A rebuilt stream whose rng/mc_seed differs from the snapshot's
+    must be rejected with the offending field named — silently resuming
+    would desynchronize the MC draw streams."""
+    model, params, x, y = setup
+    plan, cfg = _plan(k=3)
+    loss = CrossEntropyLoss()
+    store = SweepCheckpointer(str(tmp_path / "sweep"))
+    with pytest.raises(SimulatedFailure):
+        plan.run_checkpointed(model, params, x, y, loss, cfg=cfg,
+                              checkpointer=store,
+                              injector=FailureInjector(fail_at_step=2))
+    with pytest.raises(ValueError, match="'rng'"):
+        plan.resume(model, params, x, y, loss, store,
+                    cfg=ExtensionConfig(mc_seed=8))
+
+
+def test_strict_resume_requires_snapshot(setup, tmp_path):
+    model, params, x, y = setup
+    plan, cfg = _plan(k=3)
+    with pytest.raises(FileNotFoundError, match="no sweep snapshot"):
+        plan.resume(model, params, x, y, CrossEntropyLoss(),
+                    SweepCheckpointer(str(tmp_path / "empty")), cfg=cfg)
+
+
+def test_supports_checkpoint_gate(setup):
+    """Reducers whose accumulator cannot round-trip declare
+    supports_checkpoint=False and must be rejected at stream build with
+    the extension + reducer named (the streaming scan still takes them)."""
+    model, params, x, y = setup
+
+    class OpaqueReducer(Reducer):
+        name = "opaque_test"
+        supports_checkpoint = False
+
+    ext = Extension("_opaque_stat", "first", reduce=OpaqueReducer())
+    plan = plan_sweeps((ext,), ExtensionConfig()).accumulate(2)
+    with pytest.raises(ValueError, match="supports_checkpoint") as ei:
+        plan.stream(model, params, x, y, CrossEntropyLoss())
+    assert "_opaque_stat" in str(ei.value)
+    assert "opaque_test" in str(ei.value)
+
+
+def test_laplace_resumable_fit(setup, tmp_path):
+    """A killed streaming Laplace fit resumes to the exact uninterrupted
+    posterior; a checkpointed fit without the streaming lane is rejected
+    actionably."""
+    from repro import laplace
+
+    model, params, x, y = setup
+    loss = CrossEntropyLoss()
+    cfg = ExtensionConfig(mc_seed=5)
+    ref = laplace.fit_posterior(model, params, x, y, loss, structure="diag",
+                                mc=True, cfg=cfg, microbatch_size=4)
+    d = str(tmp_path / "fit")
+    with pytest.raises(SimulatedFailure):
+        laplace.fit_posterior(model, params, x, y, loss, structure="diag",
+                              mc=True, cfg=cfg, microbatch_size=4,
+                              ckpt_dir=d,
+                              injector=FailureInjector(fail_at_step=1))
+    post = laplace.fit_posterior(model, params, x, y, loss,
+                                 structure="diag", mc=True, cfg=cfg,
+                                 microbatch_size=4, ckpt_dir=d, resume=True)
+    for u, v in zip(jax.tree.leaves(ref.curv), jax.tree.leaves(post.curv)):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), **TOL)
+    with pytest.raises(laplace.LaplaceStructureError,
+                       match="streaming accumulated sweep"):
+        laplace.fit_posterior(model, params, x, y, loss, structure="diag",
+                              mc=True, cfg=cfg, ckpt_dir=d)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-layer regressions (the satellite bugfixes)
+# ---------------------------------------------------------------------------
+
+
+def test_gc_sweeps_stale_tmp_dirs(tmp_path):
+    """A save killed between mkdtemp and the atomic rename leaves a
+    ``.tmp_save_*`` dir that step-pruning never touched — the next gc
+    must sweep it."""
+    d = str(tmp_path)
+    params = {"w": jnp.ones((3, 2))}
+    os.makedirs(os.path.join(d, ".tmp_save_orphan"))
+    ckpt.save(d, 1, params)
+    assert not [f for f in os.listdir(d) if f.startswith(".tmp_save_")]
+    assert os.path.isdir(os.path.join(d, "step_00000001"))
+
+
+def test_gc_keep_zero_rejected(tmp_path):
+    """keep=0 used to slice steps[:-0] == [] and silently keep
+    everything; both save() and _gc now reject keep < 1."""
+    d = str(tmp_path)
+    params = {"w": jnp.ones((2,))}
+    with pytest.raises(ValueError, match="keep must be >= 1"):
+        ckpt.save(d, 1, params, keep=0)
+    assert not os.listdir(d) if os.path.isdir(d) else True  # nothing written
+    ckpt.save(d, 1, params, keep=1)
+    ckpt.save(d, 2, params, keep=1)
+    steps = [f for f in os.listdir(d) if f.startswith("step_")]
+    assert steps == ["step_00000002"]
+    with pytest.raises(ValueError, match="keep must be >= 1"):
+        ckpt._gc(d, 0)
+
+
+def test_restore_validates_treedef(tmp_path):
+    """Same leaf count, different structure: restore must fail on the
+    recorded treedef instead of zipping arrays into the wrong leaves."""
+    d = str(tmp_path)
+    ckpt.save(d, 1, {"w": jnp.ones((3, 2)), "b": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="tree structure"):
+        ckpt.restore(d, 1, {"w": jnp.ones((3, 2)), "c": jnp.zeros((2,))})
+
+
+def test_restore_validates_leaf_shapes(tmp_path):
+    """Same treedef, drifted leaf shape: the error must name the first
+    offending leaf (the astype cast used to mask this entirely)."""
+    d = str(tmp_path)
+    ckpt.save(d, 1, {"w": jnp.ones((3, 2)), "b": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match=r"\['params'\]\['b'\]"):
+        ckpt.restore(d, 1, {"w": jnp.ones((3, 2)), "b": jnp.zeros((3,))})
+    # the happy path still round-trips (and still applies dtype policy)
+    p, _ = ckpt.restore(d, 1, {"w": jnp.ones((3, 2), jnp.bfloat16),
+                               "b": jnp.zeros((2,))})
+    assert p["w"].dtype == jnp.bfloat16
+
+
+def test_sweep_checkpointer_roundtrip(tmp_path):
+    store = SweepCheckpointer(str(tmp_path), keep=2)
+    state = {"loss": jnp.float32(1.5), "carry": {"v": jnp.arange(4.0)}}
+    assert store.restore_latest(state) is None
+    for cursor in (1, 2, 3):
+        store.save(cursor, state, {"n": 10})
+    cur, st, meta = store.restore_latest(state)
+    assert cur == 3 and meta["n"] == 10
+    np.testing.assert_allclose(st["carry"]["v"], np.arange(4.0))
+    kept = [f for f in os.listdir(str(tmp_path)) if f.startswith("step_")]
+    assert sorted(kept) == ["step_00000002", "step_00000003"]  # keep=2
+    with pytest.raises(ValueError, match="keep must be >= 1"):
+        SweepCheckpointer(str(tmp_path), keep=0)
