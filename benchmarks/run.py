@@ -18,6 +18,9 @@ smaller shapes where a benchmark defines them (currently ``fused``).
             incl. a beyond-memory-scale batch lane       (ISSUE 5 tentpole)
   ntk       empirical NTK sweep: fused cross-block
             kernel vs einsum, streamed vs monolithic     (ISSUE 6 tentpole)
+  obs       observability overhead: instrumented vs
+            uninstrumented fused sweep + SweepStream,
+            ratio lanes gated at 1.05x in CI             (ISSUE 8 tentpole)
   laplace   posterior fit + fused predictive-variance
             kernel vs naive Jacobian baseline; also
             refreshes BENCH_laplace.json (repo root, or
@@ -82,6 +85,7 @@ def main() -> None:
         "fused": bench_fused_first_order.main,
         "accumulate": bench_accumulate.main,
         "ntk": bench_ntk.main,
+        "obs": bench_overhead.obs_overhead,
         "laplace": bench_laplace.main,
         "roofline": bench_roofline.main,
     }

@@ -52,6 +52,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
+
 try:  # jax >= 0.5 exposes it at top level
     from jax import shard_map as _shard_map
 except ImportError:
@@ -196,8 +198,10 @@ class SweepPlan:
         plan-object counterpart of :func:`run`, giving all three lanes
         (monolithic / sharded / accumulated) one calling convention."""
         extensions = tuple(by_name(n) for n in sorted(self.names))
-        return run(model, params, inputs, targets, loss,
-                   extensions=extensions, cfg=cfg, rng=rng)
+        with obs.span("engine/sweep", lane="monolithic",
+                      extensions=",".join(sorted(self.names))):
+            return run(model, params, inputs, targets, loss,
+                       extensions=extensions, cfg=cfg, rng=rng)
 
 
 def plan_sweeps(extensions: Sequence[Extension],
@@ -597,7 +601,9 @@ class ShardedSweepPlan:
                         in_specs=(P(), batch, batch, P()),
                         out_specs=(P(), P(), batch, ext_specs),
                         check_rep=False)
-        loss_val, grads, logits, ext = fn(params, inputs, targets, rng)
+        with obs.span("engine/sweep", lane="sharded", shards=self.n_shards,
+                      extensions=",".join(sorted(self.plan.names))):
+            loss_val, grads, logits, ext = fn(params, inputs, targets, rng)
         return Results(loss=loss_val, grads=grads, logits=logits, ext=ext)
 
     def accumulate(self, num_microbatches: int) -> "AccumulatedSweepPlan":
@@ -819,7 +825,11 @@ def _run_accumulated(model, params, inputs, targets, loss, extensions,
             model.kfra_apply(params, gbar, parts, extensions, cfg)[1],
             "kfra")
     for nm in carry_names:
-        ext[nm] = red[nm].finalize(c_ext[nm], meta_fin)
+        # spans here record at trace time when this driver runs under jit
+        # or inside a shard_map body — still useful: finalize cost is
+        # dominated by tracing/lowering for the kron/KFRA replays.
+        with obs.span("engine/finalize", ext=nm, reducer=red[nm].name):
+            ext[nm] = red[nm].finalize(c_ext[nm], meta_fin)
     ext.update(cat_ext)
     for nm in pair_names:
         ext[nm] = jax.tree.map(
@@ -909,9 +919,12 @@ class AccumulatedSweepPlan:
             cfg2 = dataclasses.replace(
                 cfg, shard_axes=None, total_units=mg, total_batch=n,
                 accum_stats=True, cross_split=None)
-            lv, grads, logits, ext = _run_accumulated(
-                model, params, inputs, targets, loss, extensions, cfg2,
-                rng, self.num_microbatches)
+            with obs.span("engine/sweep", lane="accumulated",
+                          k=self.num_microbatches, n=n,
+                          extensions=",".join(sorted(self.plan.names))):
+                lv, grads, logits, ext = _run_accumulated(
+                    model, params, inputs, targets, loss, extensions, cfg2,
+                    rng, self.num_microbatches)
             return Results(loss=lv, grads=grads, logits=logits, ext=ext)
 
         sp = self.sharded
@@ -943,8 +956,11 @@ class AccumulatedSweepPlan:
                         in_specs=(P(), batch, batch, P(), P()),
                         out_specs=(P(), P(), batch, ext_specs),
                         check_rep=False)
-        lv, grads, logits, ext = fn(params, inputs, targets, rng,
-                                    jnp.asarray(mg, jnp.float32))
+        with obs.span("engine/sweep", lane="shard_accumulate",
+                      k=k, n=n, shards=sp.n_shards,
+                      extensions=",".join(sorted(self.plan.names))):
+            lv, grads, logits, ext = fn(params, inputs, targets, rng,
+                                        jnp.asarray(mg, jnp.float32))
         return Results(loss=lv, grads=grads, logits=logits, ext=ext)
 
     # -- preemption-safe streaming (SweepStream) ----------------------------
@@ -1239,10 +1255,16 @@ class SweepStream:
                              "holds the finalized Results")
         unit = self.units[self._cursor]
         if unit[0] == "slice":
-            self._do_slice(unit[1])
+            t = unit[1]
+            rows = self.m if t < self.k_full else self.rem
+            with obs.span("engine/stream/slice", t=t, rows=rows):
+                self._do_slice(t)
         else:
-            self._do_pair(*unit[1:])
+            with obs.span("engine/stream/pair", off_p=unit[1],
+                          off_q=unit[2], rows_q=unit[3]):
+                self._do_pair(*unit[1:])
         self._cursor += 1
+        obs.gauge("engine.stream.cursor", self._cursor)
         return self._cursor
 
     def _use_shard_map(self, rows) -> bool:
@@ -1462,7 +1484,9 @@ class SweepStream:
                 "kfra")
         ext = {}
         for nm in self.carry_names:
-            ext[nm] = self.red[nm].finalize(st["carry"][nm], meta_fin)
+            with obs.span("engine/finalize", ext=nm,
+                          reducer=self.red[nm].name):
+                ext[nm] = self.red[nm].finalize(st["carry"][nm], meta_fin)
         ext.update(st["rows"])
         for nm in self.pair_names:
             ext[nm] = st["pair"][nm]
@@ -1547,17 +1571,19 @@ def run(
                            cfg.sample_offset)
 
     # ---- forward ----------------------------------------------------------
-    z, tape = model.forward_tape(params, inputs)
-    loss_val = loss.value(z, targets)
+    with jax.named_scope("fwd_tape"):
+        z, tape = model.forward_tape(params, inputs)
+        loss_val = loss.value(z, targets)
 
     # ---- first-order sweep -------------------------------------------------
     # Each layer's stat hook recomputes plan.fused_mask from `first_exts`
     # (the mapping is pure), so with cfg.use_kernels the whole sweep is one
     # fused kernel launch per parameterized layer.
-    g = loss.grad(z, targets)
-    g_in, grads, stats = model.backward(
-        params, tape, g, first_exts + kron_exts, cfg
-    )
+    with jax.named_scope("first_order_sweep"):
+        g = loss.grad(z, targets)
+        g_in, grads, stats = model.backward(
+            params, tape, g, first_exts + kron_exts, cfg
+        )
 
     ext: Dict[str, Any] = {}
     names = plan.names
@@ -1616,8 +1642,10 @@ def run(
         C = loss.n_exact_cols(z)  # U·C columns for token-factored losses
         chunk = cfg.class_chunk
         if chunk is None or chunk >= C:
-            S = loss.sqrt_hessian(z, targets)
-            _, curv = model.curv_backward(params, tape, S, exact_exts, cfg, "exact")
+            with jax.named_scope("ggn_exact_sweep"):
+                S = loss.sqrt_hessian(z, targets)
+                _, curv = model.curv_backward(params, tape, S, exact_exts,
+                                              cfg, "exact")
         else:
             n_chunks = -(-C // chunk)
 
@@ -1641,8 +1669,10 @@ def run(
     if "ggn_mc" in sweeps:
         mc_exts = tuple(e for e in extensions if e.sweep == "ggn_mc")
         rng = _default_rng(sweeps, cfg, rng)
-        S = loss.sqrt_hessian_mc(rng, z, targets, cfg.mc_samples)
-        _, curv = model.curv_backward(params, tape, S, mc_exts, cfg, "mc")
+        with jax.named_scope("ggn_mc_sweep"):
+            S = loss.sqrt_hessian_mc(rng, z, targets, cfg.mc_samples)
+            _, curv = model.curv_backward(params, tape, S, mc_exts, cfg,
+                                          "mc")
         if "diag_ggn_mc" in names:
             ext["diag_ggn_mc"] = _merge_stat_trees(curv, "diag_ggn_mc")
         if "kfac" in names:

@@ -54,11 +54,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ref
 from repro.kernels.batch_l2 import batch_l2_pallas
 from repro.kernels.cross_dot import cross_dot_pallas
@@ -87,6 +88,15 @@ class KernelSpec:
 
 _REGISTRY: Dict[str, KernelSpec] = {}
 _JIT_CACHE: Dict[Tuple, Callable] = {}
+
+# dispatch-time telemetry (host side — nothing lands inside jitted code):
+# per-kernel jit-config cache hits/misses, and the padding-waste bytes one
+# call pays, measured once per (config, arg shapes) while the wrapper
+# traces and replayed from _PAD_WASTE on every cached-shape dispatch.
+_CACHE_HITS: Dict[str, int] = {}
+_CACHE_MISSES: Dict[str, int] = {}
+_PAD_WASTE: Dict[Tuple, int] = {}
+_PAD_NOTE: List[List[int]] = []  # active accumulation cells (see _pad_to)
 
 
 def register(name: str, *, ref: Optional[Callable] = None,
@@ -156,22 +166,57 @@ def dispatch(name: str, *args, **static) -> Any:
     interpret = _interpret()
     key = (name, tuple(sorted(static.items())), interpret)
     fn = _JIT_CACHE.get(key)
+    reg = obs.get()
     if fn is None:
         fn = jax.jit(partial(spec.wrapper, interpret=interpret, **static))
         _JIT_CACHE[key] = fn
-    return fn(*args)
+        _CACHE_MISSES[name] = _CACHE_MISSES.get(name, 0) + 1
+        if reg.enabled:
+            reg.count(f"kernel.cache_miss.{name}")
+    else:
+        _CACHE_HITS[name] = _CACHE_HITS.get(name, 0) + 1
+        if reg.enabled:
+            reg.count(f"kernel.cache_hit.{name}")
+    shapes = tuple(
+        (tuple(a.shape), str(a.dtype)) for a in args if hasattr(a, "shape")
+    )
+    waste = _PAD_WASTE.get((key, shapes))
+    if waste is None:
+        # first time this config sees these shapes: the wrapper is about
+        # to trace (jax.jit's shape cache is cold), so _pad_to calls run
+        # now — collect their waste into a fresh accumulation cell
+        _PAD_NOTE.append([0])
+        try:
+            out = fn(*args)
+        finally:
+            waste = _PAD_NOTE.pop()[0]
+        _PAD_WASTE[(key, shapes)] = waste
+    else:
+        out = fn(*args)
+    if reg.enabled:
+        reg.count(f"kernel.calls.{name}")
+        if waste:
+            reg.count(f"kernel.padding_waste_bytes.{name}", waste)
+    return out
 
 
-def cache_stats() -> Dict[str, int]:
-    """Per-kernel count of cached jit configurations (plus the total)."""
-    out: Dict[str, int] = {"total": len(_JIT_CACHE)}
+def cache_stats() -> Dict[str, Any]:
+    """Per-kernel count of cached jit configurations (plus the total),
+    and per-kernel dispatch hit/miss counters under ``"hits"``/``"misses"``
+    (a retrace storm shows up as misses outrunning hits)."""
+    out: Dict[str, Any] = {"total": len(_JIT_CACHE)}
     for key in _JIT_CACHE:
         out[key[0]] = out.get(key[0], 0) + 1
+    out["hits"] = dict(_CACHE_HITS)
+    out["misses"] = dict(_CACHE_MISSES)
     return out
 
 
 def clear_cache() -> None:
     _JIT_CACHE.clear()
+    _CACHE_HITS.clear()
+    _CACHE_MISSES.clear()
+    _PAD_WASTE.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +228,12 @@ def _pad_to(x, axis, mult):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
         return x
+    if _PAD_NOTE:
+        # dispatch is tracing this wrapper for the first time with these
+        # shapes: note the zero-fill bytes this pad costs per call.  Pure
+        # shape arithmetic — works identically on tracers.
+        per_row = x.size // x.shape[axis] if x.shape[axis] else 0
+        _PAD_NOTE[-1][0] += pad * per_row * x.dtype.itemsize
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .posterior import LastLayerLaplace
 
 
@@ -91,7 +93,9 @@ def optimize_marglik(post, n_steps: int = 100, lr: float = 0.1,
         return theta, hist
 
     theta0 = jnp.log(jnp.asarray([d0, s0], jnp.float32))
-    theta, hist = run_opt(theta0)
+    with obs.span("laplace/marglik", n_steps=n_steps,
+                  tune_sigma=bool(tune_sigma)):
+        theta, hist = run_opt(theta0)
     new_prior = float(jnp.exp(theta[0]))
     new_sigma = float(jnp.exp(theta[1])) if tune_sigma else s0
     new_inner = dataclasses.replace(inner, prior_prec=new_prior,

@@ -48,6 +48,7 @@ from repro.core import (
     MSELoss,
     kron as K,
 )
+from repro import obs
 from repro.core import engine as eng
 from repro.core.module import Dense, Sequential
 
@@ -106,22 +107,24 @@ def _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
     plan = eng.plan_for_batch(extensions, cfg, n, mesh=mesh,
                               shard_axes=shard_axes,
                               microbatch_size=microbatch_size)
-    if ckpt_dir is None:
-        return plan.run(model, params, x, y, loss, cfg=cfg, rng=rng)
-    if not isinstance(plan, eng.AccumulatedSweepPlan):
-        raise LaplaceStructureError(
-            "laplace: ckpt_dir needs the streaming accumulated sweep "
-            "lane — pass microbatch_size (or cfg.microbatch_size) small "
-            "enough to split the fit batch into more than one slice, so "
-            "the sweep has checkpointable work units "
-            f"(plan: {plan.describe()})")
-    from repro.train.checkpoint import SweepCheckpointer
+    with obs.span("laplace/fit_sweep", n=n,
+                  extensions=",".join(sorted(e.name for e in extensions))):
+        if ckpt_dir is None:
+            return plan.run(model, params, x, y, loss, cfg=cfg, rng=rng)
+        if not isinstance(plan, eng.AccumulatedSweepPlan):
+            raise LaplaceStructureError(
+                "laplace: ckpt_dir needs the streaming accumulated sweep "
+                "lane — pass microbatch_size (or cfg.microbatch_size) small "
+                "enough to split the fit batch into more than one slice, so "
+                "the sweep has checkpointable work units "
+                f"(plan: {plan.describe()})")
+        from repro.train.checkpoint import SweepCheckpointer
 
-    return plan.run_checkpointed(
-        model, params, x, y, loss, cfg=cfg, rng=rng,
-        checkpointer=SweepCheckpointer(ckpt_dir),
-        checkpoint_every=checkpoint_every, injector=injector,
-        resume=resume)
+        return plan.run_checkpointed(
+            model, params, x, y, loss, cfg=cfg, rng=rng,
+            checkpointer=SweepCheckpointer(ckpt_dir),
+            checkpoint_every=checkpoint_every, injector=injector,
+            resume=resume)
 
 
 def _is_kron_block(node) -> bool:
@@ -612,12 +615,14 @@ def fit_posterior(model, params, x, y, loss, *, structure: str = "diag",
         ``SweepPlan.posterior_structures``) or the model lacks the
         required layer structure — the message says what to change.
     """
-    if last_layer:
-        return LastLayerLaplace.fit(model, params, x, y, loss,
-                                    structure=structure, **kw)
-    cls = {"diag": DiagLaplace, "kron": KronLaplace}.get(structure)
-    if cls is None:
-        raise LaplaceStructureError(
-            f"fit_posterior: unknown structure '{structure}' "
-            "(expected 'diag' or 'kron')")
-    return cls.fit(model, params, x, y, loss, **kw)
+    with obs.span("laplace/fit", structure=structure,
+                  last_layer=last_layer):
+        if last_layer:
+            return LastLayerLaplace.fit(model, params, x, y, loss,
+                                        structure=structure, **kw)
+        cls = {"diag": DiagLaplace, "kron": KronLaplace}.get(structure)
+        if cls is None:
+            raise LaplaceStructureError(
+                f"fit_posterior: unknown structure '{structure}' "
+                "(expected 'diag' or 'kron')")
+        return cls.fit(model, params, x, y, loss, **kw)

@@ -33,6 +33,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.module import Dense, Sequential, _nra
 from repro.nn.layers import Conv2d
 
@@ -230,22 +231,26 @@ def glm_predictive(model, params, posterior, x, *, use_kernels: bool = True):
     if isinstance(model, Dense) and x.ndim == 2:
         # Bare Dense head (the last-layer path): closed form, no seed.
         return _dense_glm_closed_form(model, params, posterior, x)
-    z, tape = model.forward_tape(params, x)
-    S0 = _output_factor(z)
-    var0 = jnp.zeros((z.shape[-1], z.shape[0]), jnp.float32)
-    _, var = _var_sweep(model, params, tape, S0,
-                        posterior.layer_blocks(), posterior, use_kernels,
-                        var0)
-    return z, var.T
+    with obs.span("laplace/predictive/glm", n=x.shape[0],
+                  use_kernels=use_kernels):
+        z, tape = model.forward_tape(params, x)
+        S0 = _output_factor(z)
+        var0 = jnp.zeros((z.shape[-1], z.shape[0]), jnp.float32)
+        _, var = _var_sweep(model, params, tape, S0,
+                            posterior.layer_blocks(), posterior,
+                            use_kernels, var0)
+        return z, var.T
 
 
 def mc_predictive(model, params, posterior, x, key, n_samples: int = 30):
     """Monte-Carlo predictive over posterior weight samples:
     (mean [N, C], variance [N, C]) of the sampled outputs."""
-    thetas = posterior.sample(key, n_samples)
-    zs = jax.vmap(lambda p: model.apply(p, x))(thetas)
-    zs = _f32(zs)
-    return jnp.mean(zs, axis=0), jnp.var(zs, axis=0)
+    with obs.span("laplace/predictive/mc", n=x.shape[0],
+                  n_samples=n_samples):
+        thetas = posterior.sample(key, n_samples)
+        zs = jax.vmap(lambda p: model.apply(p, x))(thetas)
+        zs = _f32(zs)
+        return jnp.mean(zs, axis=0), jnp.var(zs, axis=0)
 
 
 def probit_predictive(mean, var):

@@ -66,7 +66,9 @@ def opt_shardings(p_shards, mesh, zero1=False):
 
 
 def run_cell(cfg, shape, mesh, multi_pod, opts, curvature=None):
-    t0 = time.time()
+    # perf_counter, not time.time: wall-clock adjustment (NTP) mid-compile
+    # used to yield negative compile_s
+    t0 = time.perf_counter()
     use_remat = "remat" in opts
     seq_shard = "seqshard" in opts
     mode = "long" if shape.name == "long_500k" else "std"
@@ -168,7 +170,7 @@ def run_cell(cfg, shape, mesh, multi_pod, opts, curvature=None):
         "memory": _mem_dict(ma),
         "collectives": weighted["collectives"],
         "roofline": terms,
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(time.perf_counter() - t0, 1),
         "hlo_bytes": len(hlo),
     }
 

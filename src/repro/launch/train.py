@@ -9,6 +9,7 @@ full config with the production mesh (--full --mesh single|multi).
 import argparse
 import dataclasses
 
+from repro import obs
 from repro.configs import SHAPES, get_config
 from repro.core import DiagGGNMC, ExtensionConfig, KFAC, Variance
 from repro.nn.models import build_model
@@ -51,7 +52,21 @@ def main():
                          "this many samples — identical numbers, activation "
                          "memory bounded by the microbatch; composes with "
                          "--shard-sweep (the shard x accumulate grid)")
+    ap.add_argument("--trace-jsonl", default=None,
+                    help="record an observability trace (spans / counters / "
+                         "gauges, one JSON object per line) to this file; "
+                         "render it with tools/obs_report.py")
+    ap.add_argument("--metrics-report", action="store_true",
+                    help="print the measured span tree + counters after "
+                         "training (obs.report())")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler device trace of the run "
+                         "into this directory (view with TensorBoard / "
+                         "Perfetto)")
     args = ap.parse_args()
+
+    if args.trace_jsonl or args.metrics_report or args.profile_dir:
+        obs.enable(trace_jsonl=args.trace_jsonl)
 
     cfg = get_config(args.arch)
     if not args.full:
@@ -97,20 +112,30 @@ def main():
 
         injector = FailureInjector(fail_at_step=args.fail_at_step)
         print(f"[fault] injecting failure at step {args.fail_at_step}")
-    if args.max_restarts > 0:
-        (_, _, hist, wd), restarts = fit_with_restarts(
-            model, cfg, shape, opt, loop, max_restarts=args.max_restarts,
-            on_restart=lambda i, e: print(f"[restart {i}] after: {e}"),
-            extensions=extensions, ext_cfg=ext_cfg, track=track, mesh=mesh,
-            injector=injector)
-        print(f"[fault] completed with {restarts} restart(s)")
-    else:
-        _, _, hist, wd = fit(model, cfg, shape, opt, loop,
-                             extensions=extensions, ext_cfg=ext_cfg,
-                             resume=args.resume, track=track, mesh=mesh,
-                             injector=injector)
+    with obs.profile(args.profile_dir):
+        if args.max_restarts > 0:
+            (_, _, hist, wd), restarts = fit_with_restarts(
+                model, cfg, shape, opt, loop,
+                max_restarts=args.max_restarts,
+                on_restart=lambda i, e: print(f"[restart {i}] after: {e}"),
+                extensions=extensions, ext_cfg=ext_cfg, track=track,
+                mesh=mesh, injector=injector)
+            print(f"[fault] completed with {restarts} restart(s)")
+        else:
+            _, _, hist, wd = fit(model, cfg, shape, opt, loop,
+                                 extensions=extensions, ext_cfg=ext_cfg,
+                                 resume=args.resume, track=track, mesh=mesh,
+                                 injector=injector)
     print(f"final loss {hist[-1]['loss']:.4f} "
           f"(stragglers flagged: {len(wd.straggler_steps)})")
+    if args.profile_dir:
+        print(f"[obs] device trace in {args.profile_dir}")
+    if args.metrics_report:
+        print(obs.report())
+    if args.trace_jsonl:
+        obs.disable()  # close the sink so the trace file is complete
+        print(f"[obs] trace written to {args.trace_jsonl} — render with "
+              f"'python tools/obs_report.py {args.trace_jsonl}'")
 
 
 if __name__ == "__main__":

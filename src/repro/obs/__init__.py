@@ -1,0 +1,58 @@
+"""repro.obs — near-zero-overhead observability for every runtime layer.
+
+Public surface::
+
+    from repro import obs
+
+    reg = obs.enable(trace_jsonl="trace.jsonl")   # start recording
+    with obs.span("my/phase", n=64):              # perf_counter timer
+        ...
+    obs.count("my.counter")                       # monotonic counter
+    obs.gauge("my.gauge", 0.5)                    # last-value sample
+    print(obs.report())                           # measured span tree
+    obs.disable()                                 # back to the no-op registry
+
+    with obs.profile("/tmp/jax-trace"):           # jax.profiler capture
+        ...
+
+Disabled (the default) every call is a no-op on a shared
+:class:`~repro.obs.registry.NullRegistry` — see ``docs/observability.md``
+for the overhead gate that holds instrumented fused sweeps within 5% of
+uninstrumented.
+"""
+from repro.obs.profile import profile
+from repro.obs.registry import (
+    NullRegistry,
+    ObsRegistry,
+    Span,
+    count,
+    disable,
+    enable,
+    enabled,
+    gauge,
+    get,
+    report,
+    snapshot,
+    span,
+    use,
+)
+from repro.obs.reporting import load_jsonl, render
+
+__all__ = [
+    "ObsRegistry",
+    "NullRegistry",
+    "Span",
+    "enable",
+    "disable",
+    "get",
+    "use",
+    "span",
+    "count",
+    "gauge",
+    "enabled",
+    "report",
+    "snapshot",
+    "profile",
+    "load_jsonl",
+    "render",
+]

@@ -8,10 +8,13 @@ slot reuse; a production scheduler would swap in new requests).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 
 @dataclasses.dataclass
@@ -49,7 +52,8 @@ def generate(model, params, prompts, cfg: ServeConfig, rng=None):
     n, p = prompts.shape
     caches = model.init_serve_cache(params, n, cfg.max_len,
                                     jnp.dtype(cfg.cache_dtype))
-    caches, logits = prefill(model, params, caches, prompts, p)
+    with obs.span("serve/prefill", n=n, tokens=int(p)):
+        caches, logits = prefill(model, params, caches, prompts, p)
     rng = rng if rng is not None else jax.random.PRNGKey(0)
 
     def sample(logits, key):
@@ -68,8 +72,23 @@ def generate(model, params, prompts, cfg: ServeConfig, rng=None):
         return (caches, logits, done, key), tok
 
     done0 = jnp.zeros((n,), bool)
-    (_, _, done, _), toks = jax.lax.scan(
-        body, (caches, logits, done0, rng), jnp.arange(p, cfg.max_len))
+    n_decode = cfg.max_len - p
+    reg = obs.get()
+    with obs.span("serve/decode", n=n, tokens=int(n_decode)):
+        t0 = time.perf_counter() if reg.enabled else 0.0
+        (_, _, done, _), toks = jax.lax.scan(
+            body, (caches, logits, done0, rng), jnp.arange(p, cfg.max_len))
+        if reg.enabled and not isinstance(toks, jax.core.Tracer):
+            # block so the span/gauge measure decode completion, not just
+            # dispatch — per-request latency is the serving SLO number
+            # (skipped when a caller jits generate(): trace time is not a
+            # latency)
+            toks.block_until_ready()
+            dt = time.perf_counter() - t0
+            reg.count("serve.requests", n)
+            reg.count("serve.tokens", n * int(n_decode))
+            reg.gauge("serve.decode.s_per_token",
+                      dt / max(int(n_decode), 1))
     return jnp.concatenate([prompts, toks.T.astype(jnp.int32)], axis=1)
 
 

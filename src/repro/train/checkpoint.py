@@ -18,6 +18,8 @@ import tempfile
 import jax
 import numpy as np
 
+from repro import obs
+
 
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten(tree)
@@ -37,25 +39,30 @@ def save(path, step, params, opt_state=None, extra=None, keep=3):
         state["opt"] = opt_state
     flat, treedef = _flatten(state)
     tmp = tempfile.mkdtemp(dir=path, prefix=".tmp_save_")
-    try:
-        arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-        manifest = {
-            "step": int(step),
-            "n_arrays": len(flat),
-            "treedef": str(treedef),
-            "extra": extra or {},
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        final = os.path.join(path, f"step_{int(step):08d}")
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-    except Exception:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
-    _gc(path, keep)
+    with obs.span("ckpt/save", step=int(step)) as sp:
+        try:
+            arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
+            sp.set(bytes=sum(int(a.nbytes) for a in arrays.values()),
+                   arrays=len(arrays))
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            manifest = {
+                "step": int(step),
+                "n_arrays": len(flat),
+                "treedef": str(treedef),
+                "extra": extra or {},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            final = os.path.join(path, f"step_{int(step):08d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except Exception:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        with obs.span("ckpt/gc", keep=int(keep)):
+            _gc(path, keep)
+    obs.count("ckpt.saves")
     return final
 
 
@@ -104,6 +111,13 @@ def restore(path, step, params_like, opt_like=None, shardings=None):
     ``shardings`` (matching pytree of NamedSharding) is given, device_put
     each leaf — this is where elastic re-sharding happens."""
     d = os.path.join(path, f"step_{int(step):08d}")
+    with obs.span("ckpt/restore", step=int(step),
+                  bytes=os.path.getsize(os.path.join(d, "arrays.npz"))):
+        obs.count("ckpt.restores")
+        return _restore(d, step, params_like, opt_like, shardings)
+
+
+def _restore(d, step, params_like, opt_like, shardings):
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(d, "arrays.npz"))

@@ -12,6 +12,8 @@ import dataclasses
 import time
 from typing import Callable, Optional
 
+from repro import obs
+
 
 class SimulatedFailure(RuntimeError):
     pass
@@ -42,10 +44,10 @@ class Watchdog:
         self.window = window
         self.durations = []
         self.straggler_steps = []
-        self.last_beat = time.monotonic()
+        self.last_beat = time.perf_counter()
 
     def beat(self, step: int, duration_s: float):
-        self.last_beat = time.monotonic()
+        self.last_beat = time.perf_counter()
         self.durations.append(duration_s)
         if len(self.durations) > self.window:
             self.durations.pop(0)
@@ -56,7 +58,7 @@ class Watchdog:
         return True
 
     def stalled(self):
-        return (time.monotonic() - self.last_beat) > self.stall_s
+        return (time.perf_counter() - self.last_beat) > self.stall_s
 
 
 def run_with_restarts(make_and_run: Callable[[Optional[int]], int],
@@ -74,6 +76,7 @@ def run_with_restarts(make_and_run: Callable[[Optional[int]], int],
             return make_and_run(resume), restarts
         except Exception as e:  # noqa: BLE001 — any fault triggers restart
             restarts += 1
+            obs.count("fault.restarts")
             if restarts > max_restarts:
                 raise
             if on_restart is not None:
@@ -123,6 +126,7 @@ def run_sweep_with_restarts(plan, model, params, inputs, targets, loss,
             return res, restarts
         except Exception as e:  # noqa: BLE001 — any fault triggers restart
             restarts += 1
+            obs.count("fault.sweep_restarts")
             if restarts > max_restarts:
                 raise
             if on_restart is not None:

@@ -14,6 +14,7 @@ from typing import Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import CrossEntropyLoss, ExtensionConfig
 from repro.data.synthetic import batch_for
 from repro.train import checkpoint as ckpt
@@ -97,17 +98,30 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
             injector.check(step)
         batch = batch_for(cfg, shape, step, seed=loop.seed,
                           batch=loop.batch_override)
-        t0 = time.monotonic()
-        if extensions:
-            rng = jax.random.fold_in(jax.random.PRNGKey(loop.seed + 1), step)
-            params, opt_state, metrics = step_fn(
-                params, opt_state, batch, jnp.int32(step), rng)
-        else:
-            params, opt_state, metrics = step_fn(
-                params, opt_state, batch, jnp.int32(step))
-        metrics = {k: float(v) for k, v in metrics.items()}
-        dur = time.monotonic() - t0
-        wd.beat(step, dur)
+        # perf_counter is the one wall clock for durations (monotonic on
+        # every platform, highest resolution) — the obs span uses it too
+        t0 = time.perf_counter()
+        with obs.span("train/step", step=step):
+            if extensions:
+                rng = jax.random.fold_in(jax.random.PRNGKey(loop.seed + 1),
+                                         step)
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch, jnp.int32(step), rng)
+            else:
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch, jnp.int32(step))
+            metrics = {k: float(v) for k, v in metrics.items()}
+        dur = time.perf_counter() - t0
+        stalled = wd.stalled()  # gap since the previous beat, pre-beat
+        ok = wd.beat(step, dur)
+        # per-step duration + watchdog state ride the history so post-hoc
+        # analysis needs no log scraping
+        metrics["dur_s"] = dur
+        metrics["stalled"] = float(stalled)
+        metrics["straggler"] = float(not ok)
+        obs.count("train.steps")
+        if not ok:
+            obs.count("train.watchdog.straggler")
         if (loop.marglik_every and marglik_ok
                 and (step + 1) % loop.marglik_every == 0):
             marglik_ok = _marglik_callback(model, params, batch, loss, loop,

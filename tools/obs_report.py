@@ -1,0 +1,40 @@
+"""Render a JSONL observability trace into the per-phase summary table.
+
+The offline half of ``obs.report()``: load a trace written by
+``obs.enable(trace_jsonl=...)`` (e.g. ``repro.launch.train
+--trace-jsonl``) and print the aggregated span tree — calls, total and
+mean wall time, summed numeric attrs — plus counters and gauges.  A
+truncated final line (preempted run killed mid-write) is tolerated.
+
+Usage::
+
+    python tools/obs_report.py trace.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# runnable from the repo root without PYTHONPATH=src
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.reporting import load_jsonl, render  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="render a JSONL obs trace as a per-phase summary table")
+    ap.add_argument("trace", help="JSONL trace file written by "
+                                  "obs.enable(trace_jsonl=...)")
+    args = ap.parse_args(argv)
+    events = load_jsonl(args.trace)
+    if not events:
+        print(f"{args.trace}: no events", file=sys.stderr)
+        return 1
+    print(render(events))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
