@@ -48,7 +48,8 @@ from repro.core import (
 )
 from repro.kernels import ops as kops
 from repro.kernels import ref
-from repro.laplace import DiagLaplace, KronLaplace, glm_predictive
+from repro.laplace import (DiagLaplace, FitOptions, KronLaplace,
+                           glm_predictive)
 
 
 def _fit_lanes():
@@ -62,12 +63,13 @@ def _fit_lanes():
     # Return the curvature pytree, not the posterior dataclass: time_fn's
     # block_until_ready sees through pytrees of arrays only, and fit()'s
     # async-dispatched sweep must be awaited inside the timed window.
+    opts = FitOptions(cfg=cfg)
     t_diag = time_fn(lambda: DiagLaplace.fit(model, params, x, y, loss,
-                                             cfg=cfg).curv,
+                                             options=opts).curv,
                      warmup=1, iters=3)
     emit("laplace/fit/diag", t_diag, f"c2d2_n{n}")
     t_kron = time_fn(lambda: KronLaplace.fit(model, params, x, y, loss,
-                                             cfg=cfg).kron,
+                                             options=opts).kron,
                      warmup=1, iters=3)
     emit("laplace/fit/kron", t_kron, f"c2d2_n{n}")
 
@@ -114,8 +116,9 @@ def _glm_lanes():
     params = model.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (n, t, 512))
     y = jax.random.randint(jax.random.PRNGKey(2), (n,), 0, 10)
-    post = KronLaplace.fit(model, params, x, y, loss,
-                           cfg=ExtensionConfig(use_kernels=True))
+    post = KronLaplace.fit(
+        model, params, x, y, loss,
+        options=FitOptions(cfg=ExtensionConfig(use_kernels=True)))
     # jit over (params, x) — closing over them as constants would let XLA
     # fold parts of the workload at compile time (every sibling bench
     # passes its arguments for the same reason).

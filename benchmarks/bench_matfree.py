@@ -1,0 +1,103 @@
+"""Matrix-free curvature lanes (ISSUE 9 tentpole).
+
+Three claims, measured:
+
+* a GGN-vector product costs a small constant multiple of one gradient
+  (the forward-over-reverse contraction — no factor, O(P) memory);
+* a full implicit CG-NGD direction (k products) and the Gram-space
+  kernel solve are each one jittable unit;
+* the matrix-free vs explicit-factor **crossover**: as the output
+  dimension C grows, the explicit KFLR fit's `[C, C]` factor work blows
+  up while the implicit solve's per-product cost stays flat — the lane
+  that motivates `--optimizer cg_ngd` for LM heads.
+
+Gated lanes are the ``matfree/`` ones (the claims); the ``matfree_ref/``
+gradient and explicit-factor baselines exist to be compared against and
+are allowed to drift.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, quick_mode, time_fn
+from repro.core import (
+    Activation,
+    CrossEntropyLoss,
+    Dense,
+    KFLR,
+    Sequential,
+    run,
+)
+from repro.curv import GGNOperator, cg_solve, ggn_vp, kernel_ngd_direction
+
+
+def _mlp(d, h, c, key=0):
+    model = Sequential([Dense(d, h), Activation("relu"), Dense(h, c)])
+    return model, model.init(jax.random.PRNGKey(key))
+
+
+def _batch(n, d, c, key=1):
+    kx, ky = jax.random.split(jax.random.PRNGKey(key))
+    return (jax.random.normal(kx, (n, d)),
+            jax.random.randint(ky, (n,), 0, c))
+
+
+def _product_lanes(loss):
+    n, d, h, c = (16, 32, 64, 10) if quick_mode() else (64, 64, 256, 10)
+    model, params = _mlp(d, h, c)
+    x, y = _batch(n, d, c)
+    shape = f"mlp_n{n}_d{d}_h{h}_c{c}"
+
+    grad_fn = jax.jit(
+        jax.grad(lambda p: loss.value(model.apply(p, x), y)))
+    t_g = time_fn(grad_fn, params)
+    emit(f"matfree_ref/grad/{shape}", t_g)
+
+    v = jax.tree.map(jnp.ones_like, params)
+    gv_fn = jax.jit(lambda p, t: ggn_vp(model, p, x, y, loss, t))
+    t_gv = time_fn(gv_fn, params, v)
+    emit(f"matfree/ggn_vp/{shape}", t_gv, f"{t_gv / t_g:.2f}x grad")
+
+    op = GGNOperator(model, params, x, y, loss, damping=1e-2)
+    g = grad_fn(params)
+    k = 3 if quick_mode() else 8
+    cg_fn = jax.jit(lambda b: cg_solve(op.mv, b, maxiter=k).x)
+    t_cg = time_fn(cg_fn, g)
+    emit(f"matfree/cg{k}/{shape}", t_cg, f"{t_cg / t_g:.2f}x grad")
+
+    ngd_fn = jax.jit(lambda p: kernel_ngd_direction(
+        model, p, x, y, loss, damping=1e-2)[0])
+    t_k = time_fn(ngd_fn, params)
+    emit(f"matfree/kernel_ngd/{shape}", t_k, f"{t_k / t_g:.2f}x grad")
+
+
+def _crossover_lanes(loss):
+    """Explicit KFLR fit vs implicit CG direction as C grows: the
+    factor's C² work vs the product's C-linear work."""
+    n, d, h = (8, 16, 32) if quick_mode() else (16, 32, 64)
+    cs = (8, 64) if quick_mode() else (8, 64, 256, 512)
+    k = 3 if quick_mode() else 5
+    for c in cs:
+        model, params = _mlp(d, h, c)
+        x, y = _batch(n, d, c)
+        shape = f"c{c}"
+
+        kflr_fn = jax.jit(lambda p, m=model, xx=x, yy=y: run(
+            m, p, xx, yy, loss, extensions=(KFLR,)).ext["kflr"])
+        t_f = time_fn(kflr_fn, params)
+        emit(f"matfree_ref/kflr_fit/{shape}", t_f)
+
+        def direction(p, m=model, xx=x, yy=y):
+            op = GGNOperator(m, p, xx, yy, loss, damping=1e-2)
+            g = jax.grad(lambda q: loss.value(m.apply(q, xx), yy))(p)
+            return cg_solve(op.mv, g, maxiter=k).x
+
+        t_m = time_fn(jax.jit(direction), params)
+        winner = "matfree" if t_m < t_f else "explicit"
+        emit(f"matfree/cg_direction/{shape}", t_m,
+             f"{t_m / t_f:.2f}x kflr ({winner} wins)")
+
+
+def main():
+    loss = CrossEntropyLoss()
+    _product_lanes(loss)
+    _crossover_lanes(loss)

@@ -25,6 +25,9 @@ smaller shapes where a benchmark defines them (currently ``fused``).
             kernel vs naive Jacobian baseline; also
             refreshes BENCH_laplace.json (repo root, or
             $BENCH_OUT_DIR when set — CI artifact mode)  (ISSUE 3 tentpole)
+  matfree   matrix-free curvature: GGN-vp / CG / kernel-
+            NGD cost vs one gradient, plus the implicit-
+            vs-explicit-factor crossover in C            (ISSUE 9 tentpole)
   roofline  dry-run roofline table                       (deliverable g)
 
 CI's bench-smoke job gates the fused lanes against the committed
@@ -69,6 +72,7 @@ def main() -> None:
         bench_individual,
         bench_kernels,
         bench_laplace,
+        bench_matfree,
         bench_ntk,
         bench_optimizers,
         bench_overhead,
@@ -84,6 +88,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "fused": bench_fused_first_order.main,
         "accumulate": bench_accumulate.main,
+        "matfree": bench_matfree.main,
         "ntk": bench_ntk.main,
         "obs": bench_overhead.obs_overhead,
         "laplace": bench_laplace.main,

@@ -60,8 +60,8 @@ def main():
     batch = lm_batch(dc, step=0)
     post = laplace.fit_posterior(
         model, params, batch["inputs"], batch["labels"], loss,
-        structure="kron", last_layer=True, mc=True,
-        cfg=ExtensionConfig(mc_seed=0))
+        structure="kron", last_layer=True,
+        options=laplace.FitOptions(mc=True, cfg=ExtensionConfig(mc_seed=0)))
     before = float(laplace.log_marglik(post))
     post, res = laplace.optimize_marglik(post, n_steps=100, lr=0.1)
     print(f"log-evidence {before:.1f} → {float(laplace.log_marglik(post)):.1f}"

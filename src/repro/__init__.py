@@ -1,2 +1,114 @@
-"""repro — BackPACK (ICLR 2020) as a multi-pod JAX training framework."""
-__version__ = "1.0.0"
+"""repro — BackPACK (ICLR 2020) as a multi-pod JAX training framework.
+
+The curated public surface.  Everything here is importable from the top
+level — consumers should not need deep module paths for the common
+workflow:
+
+    import repro
+
+    # one generalized backprop, many quantities (paper §3)
+    res = repro.run(model, params, x, y, repro.CrossEntropyLoss(),
+                    extensions=(repro.DiagGGN, repro.Variance))
+
+    # scale it out: plan → shard(mesh) / accumulate(k)
+    plan = repro.plan_sweeps((repro.KFAC,), repro.ExtensionConfig())
+
+    # matrix-free curvature beyond factor scale (repro.curv)
+    gv = repro.ggn_vp(model, params, x, y, loss, v)
+    sol = repro.cg_solve(op.mv, res.grads)
+
+    # curvature-backed uncertainty (repro.laplace)
+    post = repro.fit_posterior(model, params, x, y, loss)
+
+Deeper entry points stay in their subsystems: :mod:`repro.core`
+(modules, reducers, engine lanes), :mod:`repro.curv` (operators, the
+kernel-space NGD, SLQ log-det), :mod:`repro.laplace` (posteriors,
+predictives, evidence), :mod:`repro.optim`, :mod:`repro.train`,
+:mod:`repro.kernels`, :mod:`repro.obs`.
+"""
+from repro import obs
+from repro.core import (
+    # engine: the generalized backprop + its scale-out planner
+    ExtensionConfig,
+    Results,
+    SweepPlan,
+    plan_sweeps,
+    run,
+    # losses (factored Hessians: the √H and H·v closed forms)
+    CrossEntropyLoss,
+    MSELoss,
+    # extension classes (paper §3 quantities + beyond-paper family)
+    BatchDot,
+    BatchGrad,
+    BatchL2,
+    DiagGGN,
+    DiagGGNMC,
+    DiagHessian,
+    Extension,
+    GGNGram,
+    GGNTrace,
+    KFAC,
+    KFLR,
+    KFRA,
+    NTK,
+    NTKClasswise,
+    SecondMoment,
+    Variance,
+    # reducer protocol (how every statistic shards/streams)
+    Reducer,
+    register_reducer,
+)
+from repro.curv import (
+    GGNOperator,
+    HessianOperator,
+    cg_solve,
+    ggn_vp,
+    hvp,
+    slq_logdet,
+)
+from repro.laplace import fit_posterior
+
+__version__ = "1.1.0"
+
+__all__ = [
+    # engine
+    "ExtensionConfig",
+    "Results",
+    "SweepPlan",
+    "plan_sweeps",
+    "run",
+    # losses
+    "CrossEntropyLoss",
+    "MSELoss",
+    # extensions
+    "BatchDot",
+    "BatchGrad",
+    "BatchL2",
+    "DiagGGN",
+    "DiagGGNMC",
+    "DiagHessian",
+    "Extension",
+    "GGNGram",
+    "GGNTrace",
+    "KFAC",
+    "KFLR",
+    "KFRA",
+    "NTK",
+    "NTKClasswise",
+    "SecondMoment",
+    "Variance",
+    # reducers
+    "Reducer",
+    "register_reducer",
+    # matrix-free curvature
+    "GGNOperator",
+    "HessianOperator",
+    "cg_solve",
+    "ggn_vp",
+    "hvp",
+    "slq_logdet",
+    # uncertainty
+    "fit_posterior",
+    # observability
+    "obs",
+]

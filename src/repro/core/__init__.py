@@ -26,6 +26,7 @@ from .extensions import (
     ExtensionConfig,
     FusedMask,
     FusedSecondMask,
+    GGNGram,
     GGNTrace,
     KFAC,
     KFLR,
@@ -42,6 +43,7 @@ from . import reducers
 from .reducers import (
     CONCAT,
     GRAM,
+    GRAM_PAIR,
     KRON,
     MOMENT_MERGE,
     PMEAN,
@@ -77,6 +79,7 @@ from .engine import (
     ShardedSweepPlan,
     SweepPlan,
     SweepStream,
+    gram_total,
     loss_and_grad,
     ntk_total,
     plan_for_batch,

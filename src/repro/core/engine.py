@@ -73,7 +73,6 @@ from .extensions import (
 from .module import Module
 from .reducers import (
     PSUM,
-    GramReducer,
     Reducer,
     _chan_merge,
     merge_stat_trees as _merge_stat_trees,
@@ -414,6 +413,14 @@ class _ScaledLoss:
     def hessian_mean(self, z, y):
         ml, mg = self._m(y)
         return self._psum(self.base.hessian_mean(z, y) * ml) / mg
+
+    def hessian_vec(self, z, y, v):
+        # Per-sample like ``grad``: rescale this partial batch's 1/M_local
+        # to 1/M_global, no psum (matrix-free products psum the final
+        # parameter-space result themselves).
+        ml, mg = self._m(y)
+        hv = self.base.hessian_vec(z, y, v)
+        return (hv.astype(jnp.float32) * (ml / mg)).astype(hv.dtype)
 
 
 def _default_rng(sweeps, cfg, rng):
@@ -773,7 +780,7 @@ def _run_accumulated(model, params, inputs, targets, loss, extensions,
                       extensions=pair_exts, cfg=cfg_p, rng=rng)
             return res.ext
 
-        def scatter_pair(acc, blk, off_p, off_q, rows_q):
+        def scatter_pair(acc, blk, off_p, off_q, rows_q, reducer):
             if sharded:
                 b = blk.reshape((m + rows_q, n_shards, m + rows_q)
                                 + blk.shape[2:])
@@ -781,7 +788,7 @@ def _run_accumulated(model, params, inputs, targets, loss, extensions,
                 bot = b[m:, :, :m]             # [rows_q, S, m, ...]
             else:
                 top = blk[:, None]
-                bot = GramReducer.transpose_block(blk)[:, None]
+                bot = reducer.transpose_block(blk)[:, None]
             tail0 = (0,) * (top.ndim - 3)
             acc = jax.lax.dynamic_update_slice(
                 acc, top.astype(acc.dtype), (off_p, 0, off_q) + tail0)
@@ -794,8 +801,8 @@ def _run_accumulated(model, params, inputs, targets, loss, extensions,
                 pext = pair_run(off_p, off_q, rows_q)
                 acc_tree = {
                     nm: jax.tree.map(
-                        lambda a, b: scatter_pair(a, b, off_p, off_q,
-                                                  rows_q),
+                        lambda a, b, r=red[nm]: scatter_pair(
+                            a, b, off_p, off_q, rows_q, r),
                         acc_tree[nm], pext[nm])
                     for nm in pair_names}
                 return acc_tree, None
@@ -1380,15 +1387,17 @@ class SweepStream:
                                      jnp.int32(off_q))
         st = self.state
 
-        def put(buf, blk):
+        def put(buf, blk, reducer):
             tail0 = (0,) * (buf.ndim - 2)
             buf = jax.lax.dynamic_update_slice(
                 buf, blk.astype(buf.dtype), (off_p, off_q) + tail0)
-            bot = GramReducer.transpose_block(blk).astype(buf.dtype)
+            bot = reducer.transpose_block(blk).astype(buf.dtype)
             return jax.lax.dynamic_update_slice(
                 buf, bot, (off_q, off_p) + tail0)
 
-        st["pair"] = {nm: jax.tree.map(put, st["pair"][nm], pext[nm])
+        st["pair"] = {nm: jax.tree.map(
+                          lambda a, b, r=self.red[nm]: put(a, b, r),
+                          st["pair"][nm], pext[nm])
                       for nm in self.pair_names}
 
     # -- snapshots ----------------------------------------------------------
@@ -1641,6 +1650,13 @@ def run(
         exact_exts = tuple(e for e in extensions if e.sweep == "ggn_exact")
         C = loss.n_exact_cols(z)  # U·C columns for token-factored losses
         chunk = cfg.class_chunk
+        if "ggn_gram" in names and chunk is not None and chunk < C:
+            # Cross-column Gram entries K[·,·,c,c'] pair columns across
+            # chunks — a chunked scan only ever sees one chunk's columns.
+            raise ValueError(
+                "GGNGram is incompatible with class_chunk: the logit-space "
+                "Gram needs all C̃ columns of the sqrt-Hessian factor at "
+                "once (cross-chunk column pairs are unformable)")
         if chunk is None or chunk >= C:
             with jax.named_scope("ggn_exact_sweep"):
                 S = loss.sqrt_hessian(z, targets)
@@ -1665,6 +1681,8 @@ def run(
             ext["kflr"] = _combine_kron(curv, kron_a, "kflr")
         if "ggn_trace" in names:
             ext["ggn_trace"] = _merge_stat_trees(curv, "ggn_trace")
+        if "ggn_gram" in names:
+            ext["ggn_gram"] = _merge_stat_trees(curv, "ggn_gram")
 
     if "ggn_mc" in sweeps:
         mc_exts = tuple(e for e in extensions if e.sweep == "ggn_mc")
@@ -1771,6 +1789,26 @@ def ntk_total(ext_tree):
     leaves = jax.tree.leaves(ext_tree)
     if not leaves:
         raise ValueError("empty NTK stats tree — was the extension run?")
+    out = leaves[0].astype(jnp.float32)
+    for leaf in leaves[1:]:
+        out = out + leaf.astype(jnp.float32)
+    return out
+
+
+def gram_total(ext_tree):
+    """Sum a per-parameter ``ggn_gram`` stats tree into the total kernel.
+
+    ``run(...).ext['ggn_gram']`` mirrors the params structure with one
+    ``[N, N, C̃, C̃]`` loss-scaled logit-Gram block per parameter leaf;
+    their sum is the full half-sandwich kernel ``K = J' J'ᵀ`` with
+    ``J' = √Hᵀ J`` — exactly the ``[N·C̃, N·C̃]`` operator kernel-space
+    natural gradients invert.  Layout matches :func:`ntk_total` (sample
+    axes leading), so sharded/streamed row-block leaves sum the same way.
+    """
+    leaves = jax.tree.leaves(ext_tree)
+    if not leaves:
+        raise ValueError("empty GGN-Gram stats tree — was the extension "
+                         "run?")
     out = leaves[0].astype(jnp.float32)
     for leaf in leaves[1:]:
         out = out + leaf.astype(jnp.float32)

@@ -22,6 +22,7 @@ from typing import Any, Optional, Union
 from .reducers import (
     CONCAT,
     GRAM,
+    GRAM_PAIR,
     KRON,
     MOMENT_MERGE,
     PMEAN,
@@ -128,6 +129,16 @@ NTKClasswise = Extension("ntk_classwise", "jac", reduce=GRAM)
 ``Θ[n, m, c] = ⟨J_c(x_n), J_c(x_m)⟩`` (asdfghjkl's class-wise kernel,
 sample axes leading so the Gram reducer's row-block layout applies)."""
 
+GGNGram = Extension("ggn_gram", "ggn_exact", reduce=GRAM_PAIR)
+"""Loss-scaled logit-space GGN Gram blocks ``[N, N, C̃, C̃]`` per layer
+parameter: ``K[n, m, c, c'] = ⟨Jᵀ√H-col c of x_n, Jᵀ√H-col c' of x_m⟩``
+with the exact sqrt loss-Hessian factor (C̃ = U·C columns).  Summing the
+leaves (:func:`repro.core.engine.gram_total`) gives the full kernel
+matrix ``J' J'ᵀ`` of the half-sandwich ``J' = √Hᵀ J`` — the ``[N·C̃]``
+Gram operator that kernel-space natural gradients (``repro.curv.ngd``)
+solve against when ``N·C̃ ≪ P``.  Sample axes lead, so the Gram
+reducer's row-block shard/stream layouts apply unchanged."""
+
 ALL_EXTENSIONS = (
     BatchGrad,
     BatchL2,
@@ -143,6 +154,7 @@ ALL_EXTENSIONS = (
     GGNTrace,
     NTK,
     NTKClasswise,
+    GGNGram,
 )
 _BY_NAME = {e.name: e for e in ALL_EXTENSIONS}
 

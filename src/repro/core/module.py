@@ -340,6 +340,63 @@ def _dense_ntk_stats(A, S, names, cfg: ExtensionConfig, bias: bool):
     return out
 
 
+def _dense_ggn_gram_stats(A, S, cfg: ExtensionConfig, bias: bool):
+    """Loss-scaled logit-space Gram blocks for y = x @ W (+ b).
+
+    A: [N, R, a] inputs, S: [C̃, N, R, b] *loss-scaled* sqrt-Hessian
+    factors (the exact sweep's cotangents, carrying 1/√m).  The
+    half-sandwich row J'[(n,c)] = A_nᵀ S[c,n] gives the full cross-column
+    kernel block
+
+        T[n, m, c, c'] = ⟨J'[(n,c)], J'[(m,c')]⟩
+                       = Σ_{r,s} (A_n,r·A_m,s)(S[c,n,r]·S[c',m,s])
+
+    emitted as [N, M, C̃, C̃] — sample axes leading so the Gram reducer's
+    row-block algebra (shard assembly, streaming pair passes) applies
+    unchanged.  Column semantics mirror :func:`_dense_ntk_stats`.  The
+    fused path flattens the (c, n) row pairs through one ``cross_dot``
+    launch (E = 1, N₁ = C̃·N); rank-1 layers take the closed form
+    (A₁A₂ᵀ) ⊗-broadcast over the per-column-pair (S₁S₂ᵀ).
+    """
+    Af, Sf = _f32(A), _f32(S)
+    axes, cross = _pair_split(cfg)
+    rank1 = A.shape[1] == 1
+    A1 = A2 = Af
+    S1 = S2 = Sf
+    if axes:
+        A2 = jax.lax.all_gather(Af, axes, axis=0, tiled=True)
+        S2 = jax.lax.all_gather(Sf, axes, axis=1, tiled=True)
+    elif cross is not None:
+        A1, A2 = Af[:cross], Af[cross:]
+        S1, S2 = Sf[:, :cross], Sf[:, cross:]
+    c1, n1 = S1.shape[0], S1.shape[1]
+    c2, n2 = S2.shape[0], S2.shape[1]
+    if rank1:
+        KA = A1[:, 0] @ A2[:, 0].T                            # [N, M]
+        KS = jnp.einsum("cnb,dmb->nmcd", S1[:, :, 0], S2[:, :, 0])
+        T = KA[:, :, None, None] * KS
+    elif cfg.use_kernels and cfg.use_fused:
+        from repro.kernels import ops as kops
+
+        r = A1.shape[1]
+        A1r = jnp.broadcast_to(A1[None], (c1,) + A1.shape)
+        A2r = jnp.broadcast_to(A2[None], (c2,) + A2.shape)
+        flat = kops.cross_dot(
+            A1r.reshape(1, c1 * n1, r, -1), S1.reshape(1, c1 * n1, r, -1),
+            A2r.reshape(1, c2 * n2, r, -1), S2.reshape(1, c2 * n2, r, -1))
+        # [(c,n), (d,m)] → [n, m, c, d]
+        T = flat.reshape(c1, n1, c2, n2).transpose(1, 3, 0, 2)
+    else:
+        ga = jnp.einsum("nra,msa->nmrs", A1, A2)
+        T = jnp.einsum("nmrs,cnrb,dmsb->nmcd", ga, S1, S2)
+    d = {"w": T}
+    if bias:
+        Sb1 = jnp.sum(S1, axis=2)                             # [C, N, b]
+        Sb2 = jnp.sum(S2, axis=2)
+        d["b"] = jnp.einsum("cnb,dmb->nmcd", Sb1, Sb2)
+    return {"ggn_gram": d}
+
+
 def dense_curv_stats(A, S, exts, cfg: ExtensionConfig, bias: bool, ext_prefix):
     """Second-order stats for a Dense layer from backpropagated factor ``S``.
 
@@ -419,6 +476,8 @@ def dense_curv_stats(A, S, exts, cfg: ExtensionConfig, bias: bool, ext_prefix):
             ssum = jnp.sum(Sf, axis=2)  # [C, N, b]
             d["b"] = jnp.sum(ssum * ssum, axis=(0, 2))
         out["ggn_trace"] = d
+    if "ggn_gram" in names:
+        out.update(_dense_ggn_gram_stats(A, S, cfg, bias))
     return out
 
 

@@ -299,6 +299,22 @@ class GramReducer(Reducer):
         return jnp.swapaxes(x, 0, 1)
 
 
+class GramPairReducer(GramReducer):
+    """Gram row blocks whose trailing axes are a *column pair* (e.g. the
+    ``ggn_gram`` ``[N, M, C̃, C̃]`` logit-space kernel blocks).
+
+    Identical shard/stream algebra to :class:`GramReducer`, except the
+    off-diagonal mirror: block (p, q) entry ``T[n, m, c, c']`` is the
+    inner product of row (n, c) with row (m, c'), so the (q, p) block
+    transposes the column pair *along with* the sample pair."""
+
+    name = "gram_pair"
+
+    @staticmethod
+    def transpose_block(x):
+        return jnp.swapaxes(jnp.swapaxes(x, 0, 1), 2, 3)
+
+
 class KronReducer(Reducer):
     """Kronecker factor pairs: A factors are batch *means* (sharded:
     pmean; streamed: running sample-count-weighted mean), B factors batch
@@ -404,6 +420,7 @@ class MeanReducer(Reducer):
 PSUM = PsumReducer()
 CONCAT = ConcatReducer()
 GRAM = GramReducer()
+GRAM_PAIR = GramPairReducer()
 KRON = KronReducer()
 MOMENT_MERGE = MomentMergeReducer()
 PMEAN = MeanReducer()
@@ -418,7 +435,7 @@ def register_reducer(reducer: Reducer) -> Reducer:
     return reducer
 
 
-for _r in (PSUM, CONCAT, GRAM, KRON, MOMENT_MERGE, PMEAN):
+for _r in (PSUM, CONCAT, GRAM, GRAM_PAIR, KRON, MOMENT_MERGE, PMEAN):
     register_reducer(_r)
 
 

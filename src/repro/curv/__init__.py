@@ -1,0 +1,39 @@
+"""repro.curv — matrix-free curvature: products, solvers, estimators.
+
+BackPACK's explicit diagonals and Kronecker factors (PAPER.md §3) stop
+scaling once materialization is infeasible; curvature-*vector* products
+do not.  This subsystem provides the beyond-factor lane:
+
+* :func:`ggn_vp` / :func:`hvp` — forward-over-reverse GGN- and
+  Hessian-vector products (``jvp`` through the network, the exact loss
+  Hessian from :mod:`repro.core.loss_hessian` in the middle, ``vjp``
+  back), composing with the engine's scale machinery: ``microbatch_size``
+  streams the contraction, ``mesh`` shards the batch — both via the
+  mask-aware ``_ScaledLoss`` correction, so the product matches its
+  monolithic single-device value exactly.
+* :class:`GGNOperator` / :class:`HessianOperator` — the same products as
+  reusable linear operators (``.mv`` / batched ``.mv_stacked``).
+* :func:`cg_solve` — batched preconditioned conjugate gradients against
+  any such operator (the implicit solve behind natural-gradient steps).
+* :func:`kernel_ngd_direction` — kernel-space natural gradient: the
+  Woodbury identity moves the solve into the ``[N·C̃]`` logit-Gram space
+  when ``N·C̃ ≪ P``, with the Gram assembled by the engine's ``ggn_gram``
+  extension through the fused ``cross_dot`` kernel.
+* :func:`slq_logdet` — stochastic Lanczos quadrature log-determinant
+  (Hutchinson probes), the beyond-factor evidence path for
+  :mod:`repro.laplace.marglik`.
+"""
+from .products import GGNOperator, HessianOperator, ggn_vp, hvp
+from .cg import cg_solve
+from .ngd import kernel_ngd_direction
+from .logdet import slq_logdet
+
+__all__ = [
+    "GGNOperator",
+    "HessianOperator",
+    "cg_solve",
+    "ggn_vp",
+    "hvp",
+    "kernel_ngd_direction",
+    "slq_logdet",
+]

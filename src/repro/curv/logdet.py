@@ -1,0 +1,84 @@
+"""Stochastic Lanczos quadrature (SLQ) log-determinant estimation.
+
+    log det A = tr log A ≈ (1/K) Σ_k  dim · Σ_j τ²_{kj} log λ_{kj}
+
+with Hutchinson (Rademacher) probes ``v_k`` and ``(λ, τ)`` the Ritz
+values/first-component weights of an m-step Lanczos tridiagonalization of
+``A`` started at ``v_k`` (Ubaru–Chen–Saad 2017).  ``A`` is touched only
+through ``mv`` — m matrix-vector products per probe — so the estimator
+scales to any operator the matrix-free lane can apply: the log-det of a
+damped GGN whose explicit factors would never fit, estimated at
+``K·m`` gradient-sweep cost and O(m·P) memory.
+
+Lanczos runs on the raveled parameter vector with full
+reorthogonalization against the stored basis (m is small; without it the
+classic loss-of-orthogonality bias wrecks the quadrature weights).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+class SLQResult(NamedTuple):
+    logdet: jnp.ndarray       # the MC estimate
+    per_probe: jnp.ndarray    # [probes] individual quadrature estimates
+
+
+def slq_logdet(mv: Callable, template, *, rng, probes: int = 8,
+               iters: int = 20) -> SLQResult:
+    """Estimate ``log det A`` of the SPD operator ``mv``.
+
+    ``template`` is any pytree with the operator's domain structure (the
+    params tree); probe vectors are drawn to match it.  ``probes``
+    controls MC variance (√-rate), ``iters`` the quadrature accuracy
+    (exponential in the condition number's √).  Returns the estimate and
+    the per-probe values (their spread is the error bar).
+    """
+    flat0, unravel = ravel_pytree(template)
+    dim = flat0.size
+    m = min(iters, dim)
+
+    def mv_flat(x):
+        return ravel_pytree(mv(unravel(x.astype(flat0.dtype))))[0].astype(
+            jnp.float32)
+
+    def lanczos(v0):
+        V0 = jnp.zeros((m, dim), jnp.float32)
+
+        def step(carry, i):
+            V, v, v_prev, beta_prev = carry
+            V = V.at[i].set(v)
+            w = mv_flat(v) - beta_prev * v_prev
+            alpha = jnp.vdot(w, v)
+            w = w - alpha * v
+            # full reorthogonalization (unfilled rows are zero)
+            w = w - V.T @ (V @ w)
+            beta = jnp.linalg.norm(w)
+            v_next = w / jnp.maximum(beta, 1e-30)
+            return (V, v_next, v, beta), (alpha, beta)
+
+        (_, _, _, _), (alphas, betas) = jax.lax.scan(
+            step, (V0, v0, jnp.zeros_like(v0), jnp.float32(0.0)),
+            jnp.arange(m))
+        return alphas, betas
+
+    def one_probe(key):
+        s = jax.random.rademacher(key, (dim,), jnp.float32)
+        v0 = s / jnp.sqrt(jnp.float32(dim))
+        alphas, betas = lanczos(v0)
+        T = (jnp.diag(alphas) + jnp.diag(betas[:-1], 1)
+             + jnp.diag(betas[:-1], -1))
+        lam, U = jnp.linalg.eigh(T)
+        # Breakdown (β→0: Krylov space exhausted) pads T with decoupled
+        # zero modes; their Ritz weight on e₁ is ~0, but clamp λ anyway.
+        lam = jnp.maximum(lam, 1e-30)
+        tau2 = U[0, :] ** 2
+        return jnp.float32(dim) * jnp.sum(tau2 * jnp.log(lam))
+
+    keys = jax.random.split(rng, probes)
+    per = jnp.stack([one_probe(k) for k in keys])
+    return SLQResult(logdet=jnp.mean(per), per_probe=per)

@@ -1,0 +1,103 @@
+"""Kernel-space natural gradient: solve in [N·C̃] Gram space, not [P].
+
+For the damped GGN ``F = J'ᵀJ' + δI`` (``J' = √Hᵀ J``, the loss-scaled
+half-sandwich Jacobian of the Dense-visible parameters), the Woodbury
+identity moves the solve into sample space:
+
+    F⁻¹ g = (1/δ) [ g − J'ᵀ (K + δI)⁻¹ J' g ],    K = J' J'ᵀ  [N·C̃, N·C̃]
+
+— asdfghjkl's ``kernel_free_cross_entropy`` trick: when ``N·C̃ ≪ P`` the
+only dense object is the Gram matrix ``K``, assembled by the engine's
+``ggn_gram`` extension (one extra backward sweep; the inner J·Jᵀ routed
+through the fused ``cross_dot`` kernel under ``cfg.use_kernels``), and
+the parameter-space work is one jvp + one vjp.  Parameters outside the
+Gram's coverage (embeddings, norms — layers without a Dense curvature
+hook) see ``F = δI`` exactly, so their direction is the damped-SGD
+``g/δ`` — the same fallback convention as ``optim.precond``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import gram_total, run
+from repro.core.extensions import ExtensionConfig, GGNGram
+
+
+def _covered(params, gram_tree):
+    """Params-shaped pytree of bools: does this leaf have a Gram block?"""
+    def rec(p, s):
+        if isinstance(p, dict):
+            return {k: rec(p[k], s.get(k) if isinstance(s, dict) else None)
+                    for k in p}
+        if isinstance(p, (tuple, list)):
+            s_t = s if isinstance(s, (tuple, list)) else (None,) * len(p)
+            return tuple(rec(pi, si) for pi, si in zip(p, s_t))
+        return s is not None and not (isinstance(s, tuple) and not s)
+
+    return rec(params, gram_tree)
+
+
+def _mask_to(tree, mask):
+    return jax.tree.map(
+        lambda t, m: t if m else jnp.zeros_like(t), tree, mask)
+
+
+def kernel_ngd_direction(model, params, inputs, targets, loss, *,
+                         damping: float,
+                         cfg: Optional[ExtensionConfig] = None,
+                         rng=None, grads=None, results=None):
+    """Natural-gradient direction ``(G + δI)⁻¹ ∇L`` via the Gram-space
+    solve.
+
+    Runs one engine sweep with the ``ggn_gram`` extension (skipped when a
+    ``results`` from such a sweep is passed in), solves the dense
+    ``[N·C̃, N·C̃]`` system, and maps back with one jvp + one vjp.  Flat
+    ``[N, C]`` model outputs only — sequence models should reach for the
+    CG lane (:func:`repro.curv.cg.cg_solve` over a
+    :class:`~repro.curv.products.GGNOperator`), whose cost never sees
+    ``N·C̃``.  Returns ``(direction, aux)`` with the loss/grads-bearing
+    engine results in ``aux``.
+    """
+    cfg = cfg or ExtensionConfig()
+    res = results
+    if res is None:
+        res = run(model, params, inputs, targets, loss,
+                  extensions=(GGNGram,), cfg=cfg, rng=rng)
+    z = res.logits
+    if z.ndim != 2:
+        raise ValueError(
+            "kernel-space NGD needs flat [N, C] model outputs, got logits "
+            f"of shape {z.shape} — use the CG lane for sequence models")
+    g = grads if grads is not None else res.grads
+    delta = jnp.float32(damping)
+
+    K = gram_total(res.ext["ggn_gram"])          # [N, N, C̃, C̃]
+    n, _, c, _ = K.shape
+    K2 = K.transpose(0, 2, 1, 3).reshape(n * c, n * c)
+
+    mask = _covered(params, res.ext["ggn_gram"])
+    g_cov = _mask_to(g, mask)
+
+    def f(p):
+        return model.apply(p, inputs)
+
+    zz, jvp_fn = jax.linearize(f, params)
+    S = loss.sqrt_hessian(zz, targets).astype(jnp.float32)  # [C̃, N, C]
+    Jg = jvp_fn(g_cov).astype(jnp.float32)                  # [N, C]
+    w = jnp.einsum("cnz,nz->nc", S, Jg).reshape(n * c)      # J' g
+
+    q = jnp.linalg.solve(
+        K2 + delta * jnp.eye(n * c, dtype=K2.dtype), w).reshape(n, c)
+
+    v_z = jnp.einsum("cnz,nc->nz", S, q)                    # √H (·)
+    vjp_fn = jax.linear_transpose(jvp_fn, params)
+    (t,) = vjp_fn(v_z.astype(zz.dtype))
+    t_cov = _mask_to(t, mask)
+
+    d = jax.tree.map(
+        lambda gi, ti: (gi.astype(jnp.float32)
+                        - ti.astype(jnp.float32)) / delta, g, t_cov)
+    return d, res

@@ -19,16 +19,22 @@ Public API::
 
     from repro.laplace import (
         DiagLaplace, KronLaplace, LastLayerLaplace, LaplaceStructureError,
-        fit_posterior, glm_predictive, mc_predictive, probit_predictive,
-        log_marglik, optimize_marglik,
+        FitOptions, fit_posterior, glm_predictive, mc_predictive,
+        probit_predictive, log_marglik, optimize_marglik,
     )
 """
 from .posterior import (
     DiagLaplace,
+    FitOptions,
     KronLaplace,
     LaplaceStructureError,
     LastLayerLaplace,
     fit_posterior,
 )
-from .marglik import log_marglik, optimize_marglik
+from .marglik import (
+    MatfreeEvidence,
+    log_marglik,
+    log_marglik_matfree,
+    optimize_marglik,
+)
 from .predictive import glm_predictive, mc_predictive, probit_predictive

@@ -33,6 +33,7 @@ downstream shape error.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, ClassVar, Optional
 
 import jax
@@ -76,6 +77,84 @@ def _n_units(loss, y) -> float:
 
 def _likelihood_of(loss) -> str:
     return "regression" if isinstance(loss, MSELoss) else "classification"
+
+
+@dataclasses.dataclass(frozen=True)
+class FitOptions:
+    """Every Laplace-fit knob, in one place.
+
+    The three ``fit`` classmethods and :func:`fit_posterior` had grown
+    drifting keyword lists (the sweep-plumbing kwargs arrived one PR at a
+    time); this dataclass is the single shared spelling::
+
+        post = fit_posterior(model, params, x, y, loss, structure="kron",
+                             options=FitOptions(mc=True, prior_prec=0.5,
+                                                mesh=mesh))
+
+    Passing the old keywords directly still works but emits a
+    ``DeprecationWarning``.
+
+    Fields
+    ------
+    mc : bool
+        Monte-Carlo curvature (DiagGGNMC / KFAC) instead of the exact
+        factorization — the LM-vocabulary path (Eq. 20).
+    prior_prec : float
+        Initial prior precision ``δ`` (tunable afterwards via
+        ``marglik.optimize_marglik``).
+    cfg, rng, extensions
+        Engine sweep configuration: ``ExtensionConfig``, the MC PRNG key,
+        and an explicit extension tuple overriding the structure default.
+    mesh, shard_axes
+        Batch-shard the fitting sweep (``SweepPlan.shard``).
+    microbatch_size
+        Stream it (``SweepPlan.accumulate``); composes with ``mesh``.
+    ckpt_dir, resume, checkpoint_every, injector
+        Preemption-safe streaming fit (``SweepStream`` snapshots);
+        ``injector`` hooks a ``train.fault.FailureInjector`` in for tests.
+    """
+
+    mc: bool = False
+    prior_prec: float = 1.0
+    cfg: Optional[ExtensionConfig] = None
+    rng: Any = None
+    extensions: Any = None
+    mesh: Any = None
+    shard_axes: Any = ("data",)
+    microbatch_size: Optional[int] = None
+    ckpt_dir: Optional[str] = None
+    resume: bool = False
+    checkpoint_every: int = 1
+    injector: Any = None
+
+    def replace(self, **kw) -> "FitOptions":
+        return dataclasses.replace(self, **kw)
+
+
+_FIT_OPTION_NAMES = tuple(f.name for f in dataclasses.fields(FitOptions))
+
+
+def _merge_fit_options(options, legacy, caller):
+    """Resolve ``options=FitOptions(...)`` against legacy keywords.
+
+    Legacy keywords still work — folded over ``options`` (or a default
+    instance) — but emit a ``DeprecationWarning`` naming the replacement.
+    Unknown keywords raise ``TypeError`` exactly like a real signature.
+    """
+    if not legacy:
+        return options if options is not None else FitOptions()
+    unknown = sorted(k for k in legacy if k not in _FIT_OPTION_NAMES)
+    if unknown:
+        raise TypeError(
+            f"{caller}: unexpected keyword argument(s) {unknown} "
+            f"(FitOptions fields: {list(_FIT_OPTION_NAMES)})")
+    names = ", ".join(f"{k}=..." for k in sorted(legacy))
+    warnings.warn(
+        f"{caller}: passing {sorted(legacy)} as keywords is deprecated — "
+        f"pass options=FitOptions({names}) instead",
+        DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(options if options is not None else
+                               FitOptions(), **legacy)
 
 
 def _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
@@ -254,18 +333,16 @@ class DiagLaplace(_EvidenceMixin):
     # -- fitting -------------------------------------------------------------
 
     @classmethod
-    def fit(cls, model, params, x, y, loss, *, mc: bool = False,
-            prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
-            rng=None, extensions=None, mesh=None, shard_axes=("data",),
-            microbatch_size: Optional[int] = None, ckpt_dir=None,
-            resume: bool = False, checkpoint_every: int = 1,
-            injector=None):
+    def fit(cls, model, params, x, y, loss, *,
+            options: Optional[FitOptions] = None, **legacy):
+        o = _merge_fit_options(options, legacy, "DiagLaplace.fit")
         cfg, extensions, rng = _fit_args(
-            cfg, extensions, rng, mc, default=(DiagGGNMC,) if mc else (DiagGGN,))
+            o.cfg, o.extensions, o.rng, o.mc,
+            default=(DiagGGNMC,) if o.mc else (DiagGGN,))
         _require_structure("diag", extensions, cfg)
         res = _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
-                         mesh, shard_axes, microbatch_size, ckpt_dir,
-                         resume, checkpoint_every, injector)
+                         o.mesh, o.shard_axes, o.microbatch_size, o.ckpt_dir,
+                         o.resume, o.checkpoint_every, o.injector)
         name = "diag_ggn_mc" if "diag_ggn_mc" in res.ext else "diag_ggn"
         curv = res.ext[name]
         try:
@@ -280,7 +357,7 @@ class DiagLaplace(_EvidenceMixin):
         return cls(mean=params, curv=curv, n_data=_n_units(loss, y),
                    loss_map=float(res.loss), likelihood=_likelihood_of(loss),
                    n_outputs=int(res.logits.shape[-1]),
-                   prior_prec=float(prior_prec))
+                   prior_prec=float(o.prior_prec))
 
     # -- evidence pieces (closed form) ---------------------------------------
 
@@ -350,18 +427,16 @@ class KronLaplace(_EvidenceMixin):
     structure: ClassVar[str] = "kron"
 
     @classmethod
-    def fit(cls, model, params, x, y, loss, *, mc: bool = False,
-            prior_prec: float = 1.0, cfg: Optional[ExtensionConfig] = None,
-            rng=None, extensions=None, mesh=None, shard_axes=("data",),
-            microbatch_size: Optional[int] = None, ckpt_dir=None,
-            resume: bool = False, checkpoint_every: int = 1,
-            injector=None):
+    def fit(cls, model, params, x, y, loss, *,
+            options: Optional[FitOptions] = None, **legacy):
+        o = _merge_fit_options(options, legacy, "KronLaplace.fit")
         cfg, extensions, rng = _fit_args(
-            cfg, extensions, rng, mc, default=(KFAC,) if mc else (KFLR,))
+            o.cfg, o.extensions, o.rng, o.mc,
+            default=(KFAC,) if o.mc else (KFLR,))
         _require_structure("kron", extensions, cfg)
         res = _run_sweep(model, params, x, y, loss, extensions, cfg, rng,
-                         mesh, shard_axes, microbatch_size, ckpt_dir,
-                         resume, checkpoint_every, injector)
+                         o.mesh, o.shard_axes, o.microbatch_size, o.ckpt_dir,
+                         o.resume, o.checkpoint_every, o.injector)
         name = "kfac" if "kfac" in res.ext else "kflr"
         kron_tree = res.ext[name]
         # Validate coverage (and surface the actionable message now, not at
@@ -370,7 +445,7 @@ class KronLaplace(_EvidenceMixin):
         return cls(mean=params, kron=kron_tree, n_data=_n_units(loss, y),
                    loss_map=float(res.loss), likelihood=_likelihood_of(loss),
                    n_outputs=int(res.logits.shape[-1]),
-                   prior_prec=float(prior_prec))
+                   prior_prec=float(o.prior_prec))
 
     # -- damped factors ------------------------------------------------------
 
@@ -489,7 +564,8 @@ class LastLayerLaplace:
 
     @classmethod
     def fit(cls, model, params, x, y, loss, *, structure: str = "kron",
-            mc: bool = False, **kw):
+            options: Optional[FitOptions] = None, **legacy):
+        o = _merge_fit_options(options, legacy, "LastLayerLaplace.fit")
         feats, head, f_params, h_params = split_last_dense(model, params)
         phi = feats.apply(f_params, x)
         inner_cls = {"diag": DiagLaplace, "kron": KronLaplace}.get(structure)
@@ -497,7 +573,7 @@ class LastLayerLaplace:
             raise LaplaceStructureError(
                 f"LastLayerLaplace: unknown structure '{structure}' "
                 "(expected 'diag' or 'kron')")
-        inner = inner_cls.fit(head, h_params, phi, y, loss, mc=mc, **kw)
+        inner = inner_cls.fit(head, h_params, phi, y, loss, options=o)
         return cls(inner=inner, full_mean=params)
 
     def features(self, model, params, x):
@@ -568,7 +644,8 @@ def _fit_args(cfg, extensions, rng, mc, default):
 
 
 def fit_posterior(model, params, x, y, loss, *, structure: str = "diag",
-                  last_layer: bool = False, **kw):
+                  last_layer: bool = False,
+                  options: Optional[FitOptions] = None, **legacy):
     """Fit a Laplace posterior from one engine sweep.
 
     Parameters
@@ -589,17 +666,12 @@ def fit_posterior(model, params, x, y, loss, *, structure: str = "diag",
         Restrict the posterior to the final Dense layer (the LM-scale
         path): the feature extractor stays a point estimate and the
         sweep runs on the head alone.
-    **kw
-        Forwarded to the structure's ``fit``: ``mc=True`` for the
-        Monte-Carlo factorization (Eq. 20), ``prior_prec``, ``cfg``
-        (``ExtensionConfig``), ``rng``, ``mesh``/``shard_axes`` for the
-        batch-sharded sweep, ``microbatch_size`` for the streaming
-        accumulated sweep (posterior fits at batches beyond device
-        memory), and — streaming only — ``ckpt_dir`` /
-        ``checkpoint_every`` / ``resume`` for a preemption-safe fit
-        whose accumulator snapshots restart a killed sweep at the
-        interrupted slice (``injector`` hooks a
-        ``repro.train.fault.FailureInjector`` in for tests).
+    options : FitOptions
+        Everything else — MC curvature, prior precision, the engine
+        sweep's scale levers (``mesh``, ``microbatch_size``) and the
+        preemption-safe streaming knobs.  See :class:`FitOptions`.
+        Passing those fields as direct keywords (the pre-FitOptions
+        signatures) still works but emits a ``DeprecationWarning``.
 
     Returns
     -------
@@ -615,14 +687,15 @@ def fit_posterior(model, params, x, y, loss, *, structure: str = "diag",
         ``SweepPlan.posterior_structures``) or the model lacks the
         required layer structure — the message says what to change.
     """
+    o = _merge_fit_options(options, legacy, "fit_posterior")
     with obs.span("laplace/fit", structure=structure,
                   last_layer=last_layer):
         if last_layer:
             return LastLayerLaplace.fit(model, params, x, y, loss,
-                                        structure=structure, **kw)
+                                        structure=structure, options=o)
         cls = {"diag": DiagLaplace, "kron": KronLaplace}.get(structure)
         if cls is None:
             raise LaplaceStructureError(
                 f"fit_posterior: unknown structure '{structure}' "
                 "(expected 'diag' or 'kron')")
-        return cls.fit(model, params, x, y, loss, **kw)
+        return cls.fit(model, params, x, y, loss, options=o)

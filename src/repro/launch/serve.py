@@ -43,8 +43,9 @@ def serve_uncertainty(cfg, model, params, prompts, *,
     calib = lm_batch(dc, 0)
     post = laplace.fit_posterior(
         model, params, calib["inputs"], calib["labels"], loss,
-        structure="diag", last_layer=True, mc=True,
-        cfg=ExtensionConfig(mc_seed=seed))
+        structure="diag", last_layer=True,
+        options=laplace.FitOptions(mc=True,
+                                   cfg=ExtensionConfig(mc_seed=seed)))
     post, res = laplace.optimize_marglik(post, n_steps=marglik_steps)
     log_fn(f"[laplace] log-evidence {float(laplace.log_marglik(post)):.1f} "
            f"prior_prec {res.prior_prec:.3g}")

@@ -13,7 +13,8 @@ from repro import obs
 from repro.configs import SHAPES, get_config
 from repro.core import DiagGGNMC, ExtensionConfig, KFAC, Variance
 from repro.nn.models import build_model
-from repro.optim import adamw, curvature_optimizer, momentum_sgd
+from repro.optim import (adamw, curvature_optimizer, make_cg_ngd_step,
+                         momentum_sgd)
 from repro.train.loop import LoopConfig, fit, fit_with_restarts
 
 
@@ -25,8 +26,14 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--optimizer", default="adamw",
-                    choices=["adamw", "momentum", "diag_ggn_mc", "kfac"])
+                    choices=["adamw", "momentum", "diag_ggn_mc", "kfac",
+                             "cg_ngd"])
     ap.add_argument("--damping", type=float, default=1e-1)
+    ap.add_argument("--cg-iters", type=int, default=10,
+                    help="cg_ngd: CG iterations per step (each costs ~2 "
+                         "gradient sweeps; the implicit solve never "
+                         "materializes a factor, so LM heads whose KFAC "
+                         "factors exceed device memory still train)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--ckpt-keep", type=int, default=3,
@@ -83,6 +90,8 @@ def main():
     elif args.optimizer == "diag_ggn_mc":
         opt = curvature_optimizer(args.lr or 0.2, args.damping, "diag_ggn_mc")
         extensions, ext_cfg = (DiagGGNMC,), ExtensionConfig(mc_samples=1)
+    elif args.optimizer == "cg_ngd":
+        opt = None  # built below, once mesh/microbatch are resolved
     else:
         opt = curvature_optimizer(args.lr or 0.3, args.damping, "kfac",
                                   stat_decay=0.9)
@@ -98,11 +107,23 @@ def main():
               f"per step)")
 
     mesh = None
-    if args.shard_sweep and extensions:
+    if args.shard_sweep and (extensions or args.optimizer == "cg_ngd"):
         from repro.launch.mesh import make_data_mesh
 
         mesh = make_data_mesh()
         print(f"[shard-sweep] data mesh over {mesh.shape['data']} device(s)")
+
+    step_fn = None
+    if args.optimizer == "cg_ngd":
+        from repro.core import CrossEntropyLoss
+
+        opt, step_fn = make_cg_ngd_step(
+            model, CrossEntropyLoss(), lr=args.lr or 0.3,
+            damping=args.damping, cg_iters=args.cg_iters,
+            ext_cfg=ext_cfg, mesh=mesh)
+        print(f"[cg_ngd] matrix-free natural gradient: {args.cg_iters} CG "
+              f"iterations/step, damping {args.damping:g} — no explicit "
+              f"curvature factors")
 
     loop = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt, log_every=10,
                       ckpt_keep=args.ckpt_keep)
@@ -119,13 +140,13 @@ def main():
                 max_restarts=args.max_restarts,
                 on_restart=lambda i, e: print(f"[restart {i}] after: {e}"),
                 extensions=extensions, ext_cfg=ext_cfg, track=track,
-                mesh=mesh, injector=injector)
+                mesh=mesh, injector=injector, step_fn=step_fn)
             print(f"[fault] completed with {restarts} restart(s)")
         else:
             _, _, hist, wd = fit(model, cfg, shape, opt, loop,
                                  extensions=extensions, ext_cfg=ext_cfg,
                                  resume=args.resume, track=track, mesh=mesh,
-                                 injector=injector)
+                                 injector=injector, step_fn=step_fn)
     print(f"final loss {hist[-1]['loss']:.4f} "
           f"(stragglers flagged: {len(wd.straggler_steps)})")
     if args.profile_dir:

@@ -1,3 +1,4 @@
+from repro.optim.matfree import make_cg_ngd_step
 from repro.optim.optimizers import Optimizer, adamw, momentum_sgd, sgd
 from repro.optim.precond import curvature_optimizer
 from repro.optim.schedule import constant, cosine, linear_warmup

@@ -46,7 +46,7 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
         extensions: Sequence = (), ext_cfg: Optional[ExtensionConfig] = None,
         injector: Optional[FailureInjector] = None, resume: bool = False,
         log_fn: Callable = print, track: Sequence[str] = (),
-        mesh=None, shard_axes=("data",)):
+        mesh=None, shard_axes=("data",), step_fn: Optional[Callable] = None):
     """Train `model` (built from arch config `cfg`) on synthetic data.
 
     With ``mesh`` the extended step runs the batch-sharded sweep lane
@@ -55,7 +55,13 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
     batch through the accumulated lane (``SweepPlan.accumulate``): the
     extended step folds every extension's sequential reducer along, and
     the plain step falls back to classic lax.scan gradient accumulation —
-    either way the loop serves effective batches beyond device memory."""
+    either way the loop serves effective batches beyond device memory.
+
+    With ``step_fn`` the step builders are bypassed for a prebuilt
+    extended-signature step ``(params, opt_state, batch, step_idx, rng)``
+    — how whole-step optimizers plug in (e.g. ``optim.make_cg_ngd_step``,
+    whose implicit solve needs the batch, not just the gradient);
+    ``opt.init`` still builds the state."""
     loss = CrossEntropyLoss()
     params = model.init(jax.random.PRNGKey(loop.seed))
     opt_state = opt.init(params)
@@ -68,7 +74,10 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
             start_step = manifest["step"]
             log_fn(f"[resume] step {start_step}")
 
-    if extensions:
+    prebuilt = step_fn is not None
+    if prebuilt:
+        step_fn = jax.jit(step_fn)
+    elif extensions:
         step_fn = jax.jit(make_extended_train_step(
             model, loss, opt, extensions, ext_cfg, track=track,
             mesh=mesh, shard_axes=shard_axes))
@@ -102,7 +111,7 @@ def fit(model, cfg, shape, opt, loop: LoopConfig,
         # every platform, highest resolution) — the obs span uses it too
         t0 = time.perf_counter()
         with obs.span("train/step", step=step):
-            if extensions:
+            if extensions or prebuilt:
                 rng = jax.random.fold_in(jax.random.PRNGKey(loop.seed + 1),
                                          step)
                 params, opt_state, metrics = step_fn(
@@ -170,8 +179,9 @@ def _marglik_callback(model, params, batch, loss, loop: LoopConfig, step,
     try:
         post = laplace.fit_posterior(
             model, params, batch["inputs"], batch["labels"], loss,
-            structure=loop.marglik_structure, last_layer=True, mc=True,
-            cfg=ExtensionConfig(mc_seed=loop.seed + step))
+            structure=loop.marglik_structure, last_layer=True,
+            options=laplace.FitOptions(
+                mc=True, cfg=ExtensionConfig(mc_seed=loop.seed + step)))
     except laplace.LaplaceStructureError as e:
         log_fn(f"[marglik] disabled: {e}")
         return False

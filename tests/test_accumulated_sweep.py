@@ -266,18 +266,20 @@ def test_laplace_fit_microbatch_matches(setup):
     loss = CrossEntropyLoss()
     ref = laplace.fit_posterior(model, params, x, y, loss, structure="kron")
     mb = laplace.fit_posterior(model, params, x, y, loss, structure="kron",
-                               microbatch_size=4)
+                               options=laplace.FitOptions(
+                                   microbatch_size=4))
     for a, b in zip(jax.tree.leaves(ref.kron), jax.tree.leaves(mb.kron)):
         np.testing.assert_allclose(np.asarray(b), np.asarray(a),
                                    rtol=3e-5, atol=3e-6)
     np.testing.assert_allclose(ref.loss_map, mb.loss_map, rtol=1e-6)
     # MC + diag structure through the same plumbing (cfg-borne size)
     ref_d = laplace.fit_posterior(
-        model, params, x, y, loss, structure="diag", mc=True,
-        cfg=ExtensionConfig(mc_seed=0))
+        model, params, x, y, loss, structure="diag",
+        options=laplace.FitOptions(mc=True, cfg=ExtensionConfig(mc_seed=0)))
     mb_d = laplace.fit_posterior(
-        model, params, x, y, loss, structure="diag", mc=True,
-        cfg=ExtensionConfig(mc_seed=0, microbatch_size=3))
+        model, params, x, y, loss, structure="diag",
+        options=laplace.FitOptions(
+            mc=True, cfg=ExtensionConfig(mc_seed=0, microbatch_size=3)))
     for a, b in zip(jax.tree.leaves(ref_d.curv), jax.tree.leaves(mb_d.curv)):
         np.testing.assert_allclose(np.asarray(b), np.asarray(a),
                                    rtol=3e-5, atol=3e-6)
@@ -291,7 +293,9 @@ def test_last_layer_laplace_microbatch(setup):
     ref = laplace.fit_posterior(model, params, x, y, loss, structure="kron",
                                 last_layer=True)
     mb = laplace.fit_posterior(model, params, x, y, loss, structure="kron",
-                               last_layer=True, microbatch_size=3)
+                               last_layer=True,
+                               options=laplace.FitOptions(
+                                   microbatch_size=3))
     for a, b in zip(jax.tree.leaves(ref.inner.kron),
                     jax.tree.leaves(mb.inner.kron)):
         np.testing.assert_allclose(np.asarray(b), np.asarray(a),

@@ -42,6 +42,7 @@ from repro.kernels import ops as kops
 from repro.kernels import ref
 from repro.laplace import (
     DiagLaplace,
+    FitOptions,
     KronLaplace,
     LaplaceStructureError,
     LastLayerLaplace,
@@ -130,7 +131,8 @@ def test_kron_logdet_matches_dense_oracle(lam):
 
 def test_diag_sampling_covariance_matches_inverse_precision(setup):
     model, params, x, y = setup
-    post = DiagLaplace.fit(model, params, x, y, LOSS, prior_prec=2.0)
+    post = DiagLaplace.fit(model, params, x, y, LOSS,
+                           options=FitOptions(prior_prec=2.0))
     thetas = post.sample(jax.random.PRNGKey(3), 4000)
     w = jax.tree.leaves(thetas)[0]          # first Dense weight, [K, D, H]
     var = jnp.var(w, axis=0)
@@ -145,7 +147,8 @@ def test_kron_sampling_covariance_matches_dense_inverse():
     params = model.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (32, 3))
     y = jax.random.randint(jax.random.PRNGKey(2), (32,), 0, 2)
-    post = KronLaplace.fit(model, params, x, y, LOSS, prior_prec=1.5)
+    post = KronLaplace.fit(model, params, x, y, LOSS,
+                           options=FitOptions(prior_prec=1.5))
     thetas = post.sample(jax.random.PRNGKey(3), 6000)
     w = thetas[0]["w"].reshape(6000, -1)     # vec in [a, b] row-major
     emp = jnp.cov(w.T)
@@ -186,7 +189,7 @@ def test_glm_predictive_fused_matches_naive_on_papernet(conv_setup,
     genuinely on the timed path)."""
     model, params, x, y = conv_setup
     post = fit_posterior(model, params, x, y, LOSS, structure=structure,
-                         prior_prec=3.0)
+                         options=FitOptions(prior_prec=3.0))
     m1, v1 = glm_predictive(model, params, post, x, use_kernels=True)
     m2, v2 = glm_predictive(model, params, post, x, use_kernels=False)
     np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-5)
@@ -201,7 +204,7 @@ def test_glm_matches_mc_predictive_at_small_covariance(setup, structure):
     the MC variance over posterior samples (tight prior → tiny Σ)."""
     model, params, x, y = setup
     post = fit_posterior(model, params, x, y, LOSS, structure=structure,
-                         prior_prec=1e4)
+                         options=FitOptions(prior_prec=1e4))
     gm, gv = glm_predictive(model, params, post, x)
     mm, mv = mc_predictive(model, params, post, x, jax.random.PRNGKey(3),
                            n_samples=4000)
@@ -221,7 +224,7 @@ def test_dense_head_closed_form_matches_generic_sweep(structure):
     x = jax.random.normal(jax.random.PRNGKey(1), (7, 5))
     y = jax.random.randint(jax.random.PRNGKey(2), (7,), 0, 3)
     post = fit_posterior(head, params, x, y, LOSS, structure=structure,
-                         prior_prec=2.0)
+                         options=FitOptions(prior_prec=2.0))
     m_fast, v_fast = glm_predictive(head, params, post, x)
     wrapped = Sequential([head])
     m_gen, v_gen = glm_predictive(wrapped, params=(params,),
@@ -242,7 +245,8 @@ def _wrap_blocks(post):
 def test_last_layer_predictive_and_sampling(setup):
     model, params, x, y = setup
     post = fit_posterior(model, params, x, y, LOSS, structure="kron",
-                         last_layer=True, prior_prec=5.0)
+                         last_layer=True,
+                         options=FitOptions(prior_prec=5.0))
     mean, var = glm_predictive(model, params, post, x)
     assert mean.shape == (N, C) and var.shape == (N, C)
     assert np.all(np.asarray(var) > 0)
@@ -284,7 +288,7 @@ def test_optimize_marglik_improves_evidence(setup, structure):
     grid (full-lane: runs the scan for both structures)."""
     model, params, x, y = setup
     post = fit_posterior(model, params, x, y, LOSS, structure=structure,
-                         prior_prec=100.0)
+                         options=FitOptions(prior_prec=100.0))
     before = float(log_marglik(post))
     tuned, res = optimize_marglik(post, n_steps=300, lr=0.2)
     after = float(log_marglik(tuned))
@@ -320,8 +324,10 @@ def test_mc_seed_makes_repeated_runs_deterministic(setup):
 
 def test_mc_fit_is_deterministic_by_default(setup):
     model, params, x, y = setup
-    p1 = DiagLaplace.fit(model, params, x, y, LOSS, mc=True)
-    p2 = DiagLaplace.fit(model, params, x, y, LOSS, mc=True)
+    p1 = DiagLaplace.fit(model, params, x, y, LOSS,
+                         options=FitOptions(mc=True))
+    p2 = DiagLaplace.fit(model, params, x, y, LOSS,
+                         options=FitOptions(mc=True))
     for a, b in zip(jax.tree.leaves(p1.curv), jax.tree.leaves(p2.curv)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
@@ -341,15 +347,35 @@ def test_misconfigured_fits_raise_actionable_errors(setup):
     model, params, x, y = setup
     # kron fit over a diag-only extension set: the plan is in the message
     with pytest.raises(LaplaceStructureError, match="kron.*KFLR/KFAC"):
-        KronLaplace.fit(model, params, x, y, LOSS, extensions=(DiagGGN,))
+        KronLaplace.fit(model, params, x, y, LOSS,
+                        options=FitOptions(extensions=(DiagGGN,)))
     with pytest.raises(LaplaceStructureError, match="diag"):
-        DiagLaplace.fit(model, params, x, y, LOSS, extensions=(KFAC,),
-                        cfg=ExtensionConfig(mc_seed=0))
+        DiagLaplace.fit(model, params, x, y, LOSS,
+                        options=FitOptions(extensions=(KFAC,),
+                                           cfg=ExtensionConfig(mc_seed=0)))
     with pytest.raises(LaplaceStructureError, match="Sequential"):
         LastLayerLaplace.fit(Dense(3, 2), Dense(3, 2).init(
             jax.random.PRNGKey(0)), x, y, LOSS)
     with pytest.raises(LaplaceStructureError, match="structure"):
         fit_posterior(model, params, x, y, LOSS, structure="full")
+
+
+def test_fit_legacy_keywords_warn_but_work(setup):
+    """Pre-FitOptions keywords are shims: same result, DeprecationWarning,
+    and typos still raise TypeError like a real signature."""
+    model, params, x, y = setup
+    with pytest.warns(DeprecationWarning, match="FitOptions"):
+        old = DiagLaplace.fit(model, params, x, y, LOSS, prior_prec=2.0)
+    new = DiagLaplace.fit(model, params, x, y, LOSS,
+                          options=FitOptions(prior_prec=2.0))
+    assert old.prior_prec == new.prior_prec == 2.0
+    for a, b in zip(jax.tree.leaves(old.curv), jax.tree.leaves(new.curv)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.warns(DeprecationWarning, match="fit_posterior"):
+        fit_posterior(model, params, x, y, LOSS, structure="kron",
+                      last_layer=True, mc=True)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        DiagLaplace.fit(model, params, x, y, LOSS, pror_prec=2.0)
 
 
 def test_loop_marglik_callback_records_evidence():

@@ -1,0 +1,92 @@
+"""The curated top-level surface (`import repro`) and its hygiene.
+
+Two families:
+
+* surface pinning — ``repro.__all__`` is an API contract: every name
+  resolves, and adding/removing one is a deliberate diff to the pinned
+  set below, not an accident of a refactor;
+* deprecation hygiene — the library's own flows (engine sweeps, Laplace
+  fits through ``FitOptions``, matrix-free products) emit **zero**
+  DeprecationWarnings, i.e. internal callers are fully migrated off the
+  shimmed spellings (string reduce aliases, pre-``FitOptions`` keywords).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+
+# The contract.  Additions land here on purpose, with docs (docs/api.md)
+# in the same diff.
+EXPECTED_SURFACE = {
+    # engine
+    "ExtensionConfig", "Results", "SweepPlan", "plan_sweeps", "run",
+    # losses
+    "CrossEntropyLoss", "MSELoss",
+    # extensions
+    "BatchDot", "BatchGrad", "BatchL2", "DiagGGN", "DiagGGNMC",
+    "DiagHessian", "Extension", "GGNGram", "GGNTrace", "KFAC", "KFLR",
+    "KFRA", "NTK", "NTKClasswise", "SecondMoment", "Variance",
+    # reducers
+    "Reducer", "register_reducer",
+    # matrix-free curvature
+    "GGNOperator", "HessianOperator", "cg_solve", "ggn_vp", "hvp",
+    "slq_logdet",
+    # uncertainty
+    "fit_posterior",
+    # observability
+    "obs",
+}
+
+
+def test_surface_is_pinned():
+    assert set(repro.__all__) == EXPECTED_SURFACE
+    assert len(repro.__all__) == len(set(repro.__all__))
+
+
+def test_every_name_resolves():
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+
+
+def test_version_present():
+    major, minor, patch = repro.__version__.split(".")
+    assert all(s.isdigit() for s in (major, minor, patch))
+
+
+def _tiny():
+    from repro.core import Activation, Dense, Sequential
+
+    model = Sequential([Dense(5, 6), Activation("tanh"), Dense(6, 3)])
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 5))
+    y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 3)
+    return model, params, x, y
+
+
+@pytest.mark.filterwarnings("error::DeprecationWarning")
+def test_library_flows_emit_zero_deprecation_warnings():
+    """`-W error::DeprecationWarning` clean: every internal caller uses
+    Reducer objects and FitOptions — no shimmed spelling survives on any
+    library-owned path."""
+    from repro.laplace import FitOptions, fit_posterior, optimize_marglik
+
+    model, params, x, y = _tiny()
+    loss = repro.CrossEntropyLoss()
+    cfg = repro.ExtensionConfig()
+    # engine: monolithic + accumulated sweep over Reducer-reduce extensions
+    repro.run(model, params, x, y, loss,
+              extensions=(repro.DiagGGN, repro.Variance, repro.GGNGram))
+    repro.plan_sweeps((repro.KFLR,), cfg).accumulate(3).run(
+        model, params, x, y, loss, cfg=cfg)
+    # laplace: the FitOptions path, fit through evidence tuning
+    post = fit_posterior(model, params, x, y, loss, structure="kron",
+                         options=FitOptions(mc=True,
+                                            cfg=repro.ExtensionConfig(
+                                                mc_seed=0)))
+    optimize_marglik(post, n_steps=3)
+    # matrix-free lane: products + solver
+    v = jax.tree.map(jnp.ones_like, params)
+    gv = repro.ggn_vp(model, params, x, y, loss, v)
+    op = repro.GGNOperator(model, params, x, y, loss, damping=0.1)
+    repro.cg_solve(op.mv, gv, maxiter=3)

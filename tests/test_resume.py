@@ -308,23 +308,25 @@ def test_laplace_resumable_fit(setup, tmp_path):
     model, params, x, y = setup
     loss = CrossEntropyLoss()
     cfg = ExtensionConfig(mc_seed=5)
+    opts = laplace.FitOptions(mc=True, cfg=cfg, microbatch_size=4)
     ref = laplace.fit_posterior(model, params, x, y, loss, structure="diag",
-                                mc=True, cfg=cfg, microbatch_size=4)
+                                options=opts)
     d = str(tmp_path / "fit")
     with pytest.raises(SimulatedFailure):
-        laplace.fit_posterior(model, params, x, y, loss, structure="diag",
-                              mc=True, cfg=cfg, microbatch_size=4,
-                              ckpt_dir=d,
-                              injector=FailureInjector(fail_at_step=1))
-    post = laplace.fit_posterior(model, params, x, y, loss,
-                                 structure="diag", mc=True, cfg=cfg,
-                                 microbatch_size=4, ckpt_dir=d, resume=True)
+        laplace.fit_posterior(
+            model, params, x, y, loss, structure="diag",
+            options=opts.replace(
+                ckpt_dir=d, injector=FailureInjector(fail_at_step=1)))
+    post = laplace.fit_posterior(
+        model, params, x, y, loss, structure="diag",
+        options=opts.replace(ckpt_dir=d, resume=True))
     for u, v in zip(jax.tree.leaves(ref.curv), jax.tree.leaves(post.curv)):
         np.testing.assert_allclose(np.asarray(u), np.asarray(v), **TOL)
     with pytest.raises(laplace.LaplaceStructureError,
                        match="streaming accumulated sweep"):
-        laplace.fit_posterior(model, params, x, y, loss, structure="diag",
-                              mc=True, cfg=cfg, ckpt_dir=d)
+        laplace.fit_posterior(
+            model, params, x, y, loss, structure="diag",
+            options=laplace.FitOptions(mc=True, cfg=cfg, ckpt_dir=d))
 
 
 # ---------------------------------------------------------------------------

@@ -74,6 +74,7 @@ def test_reduce_spec_table():
         "kfra": "pmean",
         "diag_hessian": "psum",
         "ggn_trace": "concat",
+        "ggn_gram": "gram_pair",
         "ntk": "gram",
         "ntk_classwise": "gram",
     }
