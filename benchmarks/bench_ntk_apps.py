@@ -1,0 +1,137 @@
+"""NTK consumers: GP regression / influence / selection lanes (ISSUE 10).
+
+The claims to hold:
+
+* the Gram-space GP pipeline (one engine NTK sweep + an [N, N] solve)
+  beats the materialized-Jacobian construction it replaces — the
+  ``jacrev`` baseline pays O(N·C·P) memory traffic for the same kernel;
+* the alternative solvers (dense eigh, Lanczos-top-k preconditioned CG)
+  and the streamed row-block lane stay within a constant factor of the
+  Cholesky path — they exist for truncation / beyond-memory reach, not
+  speed at smoke scale;
+* influence (BatchGrad rows + batched PCG against the GGN operator) and
+  both subset selectors run at interactive cost on pool-scale kernels.
+
+Lanes per shape (N_train, N_test, D, H, C):
+
+  ntk_apps/gp/cholesky        full gp_predict, direct solve (1× base)
+  ntk_apps/gp/eigh            dense eigendecomposition solver
+  ntk_apps/gp/lanczos         Lanczos-top-k preconditioned CG solver
+  ntk_apps/gp/streamed_k4     microbatches=4 row-block streaming
+  ntk_apps/influence          train→test scores, batched PCG solve
+  ntk_apps/self_influence     per-train-point self scores
+  ntk_apps/select/diversity   greedy max-variance coreset (k picks)
+  ntk_apps/select/bait        BAIT Fisher-trace selection (k picks)
+  ntk_apps_ref/gp_jacrev      materialized-Jacobian GP oracle (ungated)
+
+``derived`` carries the ratio vs ntk_apps/gp/cholesky (the jacrev
+baseline reports its ratio the other way).  The ``ntk_apps/`` lanes are
+gated against ``BENCH_smoke_ntk_apps.json`` in the bench-smoke CI job
+(``--pattern '^ntk_apps/'``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, quick_mode, time_group
+from repro.configs.papernets import mlp
+from repro.core import CrossEntropyLoss
+from repro.ntk_apps import (
+    gp_predict,
+    influence_scores,
+    select_subset,
+    self_influence,
+)
+
+# (N_train, N_test, D, H, C)
+SHAPES = [(96, 24, 48, 64, 8)]
+QUICK_SHAPES = [(24, 8, 16, 32, 4)]
+
+SELECT_K = 6
+
+
+def _make(n_tr, n_te, d, h, c, seed=0):
+    model = mlp(n_classes=c, in_dim=d, hidden=(h,))
+    params = model.init(jax.random.PRNGKey(seed))
+    x_tr = jax.random.normal(jax.random.PRNGKey(seed + 1), (n_tr, d))
+    y_tr = jax.random.randint(jax.random.PRNGKey(seed + 2), (n_tr,), 0, c)
+    x_te = jax.random.normal(jax.random.PRNGKey(seed + 3), (n_te, d))
+    y_te = jax.random.randint(jax.random.PRNGKey(seed + 4), (n_te,), 0, c)
+    return model, params, x_tr, y_tr, x_te, y_te
+
+
+def _jacrev_gp(model, params, x_tr, y_tr, x_te, ridge):
+    """The O(N·C·P) construction gp_predict avoids: materialize the full
+    Jacobian, form the kernel explicitly, solve."""
+    from jax.flatten_util import ravel_pytree
+
+    flat, unravel = ravel_pytree(params)
+    x = jnp.concatenate([x_tr, x_te], axis=0)
+    J = jax.jacrev(lambda f: model.apply(unravel(f), x))(flat)
+    n, c = x_tr.shape[0], J.shape[1]
+    Jf = J.reshape(-1, flat.size)
+    K = jnp.einsum("ap,bp->ab", Jf, Jf).reshape(
+        x.shape[0], c, x.shape[0], c)
+    K = jnp.einsum("ncmc->nm", K)
+    A = K[:n, :n] + ridge * jnp.eye(n)
+    Y = jax.nn.one_hot(y_tr, c)
+    alpha = jnp.linalg.solve(A, Y)
+    mean = K[n:, :n] @ alpha
+    var = jnp.diag(K[n:, n:]) - jnp.einsum(
+        "sn,ns->s", K[n:, :n], jnp.linalg.solve(A, K[:n, n:]))
+    return mean, var
+
+
+def main():
+    shapes = QUICK_SHAPES if quick_mode() else SHAPES
+    loss = CrossEntropyLoss()
+    for (n_tr, n_te, d, h, c) in shapes:
+        model, params, x_tr, y_tr, x_te, y_te = _make(n_tr, n_te, d, h, c)
+        tag = f"N{n_tr}+{n_te}_d{d}_h{h}_c{c}"
+        ridge, damping = 1e-2, 1e-2
+        rank = max(4, n_tr // 4)
+
+        def gp(solver="cholesky", **kw):
+            return gp_predict(model, params, x_tr, y_tr, x_te, loss,
+                              ridge=ridge, solver=solver, **kw)
+
+        lanes = {
+            "ntk_apps/gp/cholesky": lambda: gp().mean,
+            "ntk_apps/gp/eigh": lambda: gp("eigh").mean,
+            "ntk_apps/gp/lanczos":
+                lambda: gp("lanczos", rank=rank, cg_tol=1e-8).mean,
+            "ntk_apps/gp/streamed_k4": lambda: gp(microbatches=4).mean,
+            "ntk_apps/influence":
+                lambda: influence_scores(model, params, x_tr, y_tr, x_te,
+                                         y_te, loss,
+                                         damping=damping).scores,
+            "ntk_apps/self_influence":
+                lambda: self_influence(model, params, x_tr, y_tr, loss,
+                                       damping=damping).scores,
+            "ntk_apps/select/diversity":
+                lambda: select_subset(model, params, x_tr, y_tr, loss,
+                                      SELECT_K,
+                                      method="diversity").indices,
+            "ntk_apps/select/bait":
+                lambda: select_subset(model, params, x_tr, y_tr, loss,
+                                      SELECT_K, method="bait",
+                                      lam=damping).indices,
+            "ntk_apps_ref/gp_jacrev":
+                lambda: _jacrev_gp(model, params, x_tr, y_tr, x_te,
+                                   ridge)[0],
+        }
+        times = time_group(lanes)
+        base = times["ntk_apps/gp/cholesky"]
+        ref = times["ntk_apps_ref/gp_jacrev"]
+        for name, us in times.items():
+            if name.startswith("ntk_apps_ref/"):
+                emit(f"{name}/{tag}", us, f"x{us / base:.2f}_vs_gram_gp")
+            elif name.startswith("ntk_apps/gp/"):
+                emit(f"{name}/{tag}", us, f"x{us / ref:.2f}_vs_jacrev")
+            else:
+                emit(f"{name}/{tag}", us, f"x{us / base:.2f}_vs_gp")
+
+
+if __name__ == "__main__":
+    main()

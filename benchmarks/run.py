@@ -18,6 +18,9 @@ smaller shapes where a benchmark defines them (currently ``fused``).
             incl. a beyond-memory-scale batch lane       (ISSUE 5 tentpole)
   ntk       empirical NTK sweep: fused cross-block
             kernel vs einsum, streamed vs monolithic     (ISSUE 6 tentpole)
+  ntk_apps  NTK consumers: GP regression (cholesky/eigh/
+            Lanczos-PCG/streamed), influence, subset
+            selection, vs a jacrev-materialized baseline (ISSUE 10 tentpole)
   obs       observability overhead: instrumented vs
             uninstrumented fused sweep + SweepStream,
             ratio lanes gated at 1.05x in CI             (ISSUE 8 tentpole)
@@ -74,6 +77,7 @@ def main() -> None:
         bench_laplace,
         bench_matfree,
         bench_ntk,
+        bench_ntk_apps,
         bench_optimizers,
         bench_overhead,
         bench_roofline,
@@ -90,6 +94,7 @@ def main() -> None:
         "accumulate": bench_accumulate.main,
         "matfree": bench_matfree.main,
         "ntk": bench_ntk.main,
+        "ntk_apps": bench_ntk_apps.main,
         "obs": bench_overhead.obs_overhead,
         "laplace": bench_laplace.main,
         "roofline": bench_roofline.main,

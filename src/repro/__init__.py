@@ -20,11 +20,18 @@ workflow:
     # curvature-backed uncertainty (repro.laplace)
     post = repro.fit_posterior(model, params, x, y, loss)
 
+    # NTK consumers (repro.ntk_apps): GP regression, influence, selection
+    gp = repro.gp_predict(model, params, x, y, x_test, loss)
+    scores = repro.influence_scores(model, params, x, y, x_t, y_t, loss)
+    sel = repro.select_subset(model, params, x, y, loss, k=16)
+
 Deeper entry points stay in their subsystems: :mod:`repro.core`
 (modules, reducers, engine lanes), :mod:`repro.curv` (operators, the
-kernel-space NGD, SLQ log-det), :mod:`repro.laplace` (posteriors,
-predictives, evidence), :mod:`repro.optim`, :mod:`repro.train`,
-:mod:`repro.kernels`, :mod:`repro.obs`.
+kernel-space NGD, SLQ log-det, Lanczos top-k), :mod:`repro.ntk_apps`
+(kernel solvers, self-influence, the selection strategies),
+:mod:`repro.laplace` (posteriors, predictives, evidence),
+:mod:`repro.optim`, :mod:`repro.train`, :mod:`repro.kernels`,
+:mod:`repro.obs`.
 """
 from repro import obs
 from repro.core import (
@@ -64,9 +71,17 @@ from repro.curv import (
     cg_solve,
     ggn_vp,
     hvp,
+    lanczos_topk,
     slq_logdet,
 )
 from repro.laplace import fit_posterior
+from repro.ntk_apps import (
+    gp_predict,
+    influence_scores,
+    ntk_kernel,
+    select_subset,
+    self_influence,
+)
 
 __version__ = "1.1.0"
 
@@ -106,7 +121,14 @@ __all__ = [
     "cg_solve",
     "ggn_vp",
     "hvp",
+    "lanczos_topk",
     "slq_logdet",
+    # NTK consumers
+    "gp_predict",
+    "influence_scores",
+    "ntk_kernel",
+    "select_subset",
+    "self_influence",
     # uncertainty
     "fit_posterior",
     # observability

@@ -22,11 +22,14 @@ do not.  This subsystem provides the beyond-factor lane:
 * :func:`slq_logdet` — stochastic Lanczos quadrature log-determinant
   (Hutchinson probes), the beyond-factor evidence path for
   :mod:`repro.laplace.marglik`.
+* :func:`lanczos_topk` — top-k Ritz pairs from the same Lanczos scan
+  (full reorthogonalization, stored basis), the spectral preconditioner
+  behind the NTK-apps truncated / preconditioned Gram solves.
 """
 from .products import GGNOperator, HessianOperator, ggn_vp, hvp
 from .cg import cg_solve
 from .ngd import kernel_ngd_direction
-from .logdet import slq_logdet
+from .logdet import lanczos_topk, lanczos_tridiag, slq_logdet
 
 __all__ = [
     "GGNOperator",
@@ -35,5 +38,7 @@ __all__ = [
     "ggn_vp",
     "hvp",
     "kernel_ngd_direction",
+    "lanczos_topk",
+    "lanczos_tridiag",
     "slq_logdet",
 ]

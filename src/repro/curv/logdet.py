@@ -1,4 +1,4 @@
-"""Stochastic Lanczos quadrature (SLQ) log-determinant estimation.
+"""Lanczos tridiagonalization and its two consumers: SLQ log-det, top-k.
 
     log det A = tr log A ≈ (1/K) Σ_k  dim · Σ_j τ²_{kj} log λ_{kj}
 
@@ -10,9 +10,14 @@ scales to any operator the matrix-free lane can apply: the log-det of a
 damped GGN whose explicit factors would never fit, estimated at
 ``K·m`` gradient-sweep cost and O(m·P) memory.
 
-Lanczos runs on the raveled parameter vector with full
-reorthogonalization against the stored basis (m is small; without it the
-classic loss-of-orthogonality bias wrecks the quadrature weights).
+The same m-step scan, kept with its stored basis, yields extremal Ritz
+pairs: :func:`lanczos_topk` returns the top-k eigenvalue/eigenvector
+estimates of the operator, which the NTK-apps regression lane uses as a
+spectral preconditioner for Gram-space CG solves.
+
+Lanczos runs on the raveled vector with full reorthogonalization against
+the stored basis (m is small; without it the classic loss-of-orthogonality
+bias wrecks the quadrature weights and duplicates Ritz pairs).
 """
 from __future__ import annotations
 
@@ -28,6 +33,51 @@ class SLQResult(NamedTuple):
     per_probe: jnp.ndarray    # [probes] individual quadrature estimates
 
 
+class TopKResult(NamedTuple):
+    eigvals: jnp.ndarray      # [k] Ritz values, descending
+    eigvecs: jnp.ndarray      # [k, dim] matching Ritz vectors (rows)
+
+
+def lanczos_tridiag(mv_flat: Callable, v0: jnp.ndarray, m: int):
+    """m-step Lanczos on the flat SPD operator ``mv_flat`` from unit ``v0``.
+
+    Returns ``(alphas [m], betas [m], V [m, dim])`` — the tridiagonal
+    coefficients and the stored orthonormal basis (row i is the i-th
+    Lanczos vector).  ``betas[-1]`` is the residual norm of the last
+    step.  Full reorthogonalization against V every step.
+    """
+    dim = v0.shape[0]
+    V0 = jnp.zeros((m, dim), jnp.float32)
+
+    def step(carry, i):
+        V, v, v_prev, beta_prev = carry
+        V = V.at[i].set(v)
+        w = mv_flat(v) - beta_prev * v_prev
+        alpha = jnp.vdot(w, v)
+        w = w - alpha * v
+        # full reorthogonalization (unfilled rows are zero)
+        w = w - V.T @ (V @ w)
+        beta = jnp.linalg.norm(w)
+        v_next = w / jnp.maximum(beta, 1e-30)
+        return (V, v_next, v, beta), (alpha, beta)
+
+    (V, _, _, _), (alphas, betas) = jax.lax.scan(
+        step, (V0, v0, jnp.zeros_like(v0), jnp.float32(0.0)),
+        jnp.arange(m))
+    return alphas, betas, V
+
+
+def _flat_operator(mv: Callable, template):
+    """Ravel a pytree operator to a float32 flat-vector operator."""
+    flat0, unravel = ravel_pytree(template)
+
+    def mv_flat(x):
+        return ravel_pytree(mv(unravel(x.astype(flat0.dtype))))[0].astype(
+            jnp.float32)
+
+    return mv_flat, flat0.size
+
+
 def slq_logdet(mv: Callable, template, *, rng, probes: int = 8,
                iters: int = 20) -> SLQResult:
     """Estimate ``log det A`` of the SPD operator ``mv``.
@@ -38,38 +88,13 @@ def slq_logdet(mv: Callable, template, *, rng, probes: int = 8,
     (exponential in the condition number's √).  Returns the estimate and
     the per-probe values (their spread is the error bar).
     """
-    flat0, unravel = ravel_pytree(template)
-    dim = flat0.size
+    mv_flat, dim = _flat_operator(mv, template)
     m = min(iters, dim)
-
-    def mv_flat(x):
-        return ravel_pytree(mv(unravel(x.astype(flat0.dtype))))[0].astype(
-            jnp.float32)
-
-    def lanczos(v0):
-        V0 = jnp.zeros((m, dim), jnp.float32)
-
-        def step(carry, i):
-            V, v, v_prev, beta_prev = carry
-            V = V.at[i].set(v)
-            w = mv_flat(v) - beta_prev * v_prev
-            alpha = jnp.vdot(w, v)
-            w = w - alpha * v
-            # full reorthogonalization (unfilled rows are zero)
-            w = w - V.T @ (V @ w)
-            beta = jnp.linalg.norm(w)
-            v_next = w / jnp.maximum(beta, 1e-30)
-            return (V, v_next, v, beta), (alpha, beta)
-
-        (_, _, _, _), (alphas, betas) = jax.lax.scan(
-            step, (V0, v0, jnp.zeros_like(v0), jnp.float32(0.0)),
-            jnp.arange(m))
-        return alphas, betas
 
     def one_probe(key):
         s = jax.random.rademacher(key, (dim,), jnp.float32)
         v0 = s / jnp.sqrt(jnp.float32(dim))
-        alphas, betas = lanczos(v0)
+        alphas, betas, _ = lanczos_tridiag(mv_flat, v0, m)
         T = (jnp.diag(alphas) + jnp.diag(betas[:-1], 1)
              + jnp.diag(betas[:-1], -1))
         lam, U = jnp.linalg.eigh(T)
@@ -82,3 +107,39 @@ def slq_logdet(mv: Callable, template, *, rng, probes: int = 8,
     keys = jax.random.split(rng, probes)
     per = jnp.stack([one_probe(k) for k in keys])
     return SLQResult(logdet=jnp.mean(per), per_probe=per)
+
+
+def lanczos_topk(mv: Callable, template, *, rng, k: int,
+                 iters: int | None = None) -> TopKResult:
+    """Top-k Ritz (eigenvalue, eigenvector) pairs of the SPD operator.
+
+    Runs one m-step Lanczos sweep (``m = iters``, default ``2k + 10``
+    clamped to the dimension) from a random unit start, diagonalizes the
+    tridiagonal T, and lifts the m-space eigenvectors back through the
+    stored basis: ``y_j = Vᵀ u_j``.  Extremal Ritz values converge first,
+    so modest ``iters`` already gives the dominant spectrum — the piece a
+    truncated / preconditioned Gram-space solve needs.  ``template`` is
+    any pytree with the operator's domain structure; eigenvectors are
+    returned raveled ([k, dim] rows).
+    """
+    mv_flat, dim = _flat_operator(mv, template)
+    if k > dim:
+        raise ValueError(f"lanczos_topk: k={k} exceeds operator dim={dim}")
+    m = min(dim, iters if iters is not None else 2 * k + 10)
+    if m < k:
+        raise ValueError(f"lanczos_topk: iters={m} < k={k}")
+
+    v0 = jax.random.normal(rng, (dim,), jnp.float32)
+    v0 = v0 / jnp.linalg.norm(v0)
+    alphas, betas, V = lanczos_tridiag(mv_flat, v0, m)
+    T = (jnp.diag(alphas) + jnp.diag(betas[:-1], 1)
+         + jnp.diag(betas[:-1], -1))
+    lam, U = jnp.linalg.eigh(T)       # ascending
+    top = jnp.argsort(lam)[::-1][:k]
+    eigvals = lam[top]
+    eigvecs = (V.T @ U[:, top]).T     # [k, dim]
+    # Ritz vectors inherit V's orthonormality up to the reorthogonalization
+    # tolerance; renormalize so downstream projectors are clean.
+    eigvecs = eigvecs / jnp.maximum(
+        jnp.linalg.norm(eigvecs, axis=1, keepdims=True), 1e-30)
+    return TopKResult(eigvals=eigvals, eigvecs=eigvecs)

@@ -1,0 +1,46 @@
+"""repro.ntk_apps — consumers of the empirical-NTK / Gram lane.
+
+PR 6 made kernel *extraction* cheap: ``NTK`` / ``NTKClasswise`` ride the
+raw-Jacobian sweep through the Reducer protocol, streamed row-block Gram
+under ``accumulate(k)``, master/all/split assembly under
+``SweepPlan.shard(mesh)``.  This package builds what that unlocks
+(BackPACK's thesis applied one level up — the quantities are only useful
+with shared, tested consumers):
+
+* :mod:`repro.ntk_apps.regression` — empirical-NTK kernel regression and
+  GP predictives (mean + variance), solved in Gram space by Cholesky,
+  dense eigendecomposition (optionally truncated), or Lanczos-top-k
+  preconditioned CG on the 'master'-assembled kernel.
+* :mod:`repro.ntk_apps.influence` — influence functions / self-influence
+  over full datasets: per-sample gradients stream through the
+  ``accumulate(k)`` lane and the inverse-curvature product is
+  ``curv.GGNOperator`` + PCG, so it works where factors don't fit.
+* :mod:`repro.ntk_apps.selection` — active-learning / coreset subset
+  selection off streamed kernel blocks: greedy max-diversity (GP
+  variance reduction) and BAIT-style Fisher trace minimization in
+  kernel space.
+
+All entry points compose with ``mesh=`` (sharded sweep) and
+``microbatches=`` (streaming) exactly like the Laplace fits, and thread
+``repro.obs`` spans.
+"""
+from .regression import GPPredictive, KernelSolveInfo, gp_predict, \
+    kernel_solve, ntk_kernel
+from .influence import InfluenceResult, influence_scores, self_influence
+from .selection import SelectionResult, bait_select, greedy_max_diversity, \
+    select_subset
+
+__all__ = [
+    "GPPredictive",
+    "InfluenceResult",
+    "KernelSolveInfo",
+    "SelectionResult",
+    "bait_select",
+    "gp_predict",
+    "greedy_max_diversity",
+    "influence_scores",
+    "kernel_solve",
+    "ntk_kernel",
+    "select_subset",
+    "self_influence",
+]

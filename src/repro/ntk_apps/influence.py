@@ -1,0 +1,167 @@
+"""Influence functions and self-influence at dataset scale.
+
+Koh & Liang (2017) influence of train point ``i`` on test point ``j``:
+
+    I(i, j) = ∇ℓ_jᵀ (H + δI)⁻¹ ∇ℓ_i
+
+with ``H`` the curvature of the *mean* train loss at the current params
+(here the PSD GGN — the Fisher for the canonical losses — so the solve
+is well-posed away from an optimum too).  Removing train point ``i``
+from an n-point objective moves the optimum by ``≈ (1/n)(H+δI)⁻¹∇ℓ_i``,
+so ``scores / n`` approximates the leave-one-out delta of the test loss:
+positive score ⇒ removing ``i`` *increases* test loss ⇒ ``i`` was
+helpful for ``j``.
+
+Everything streams:
+
+* per-sample gradients ride the engine's ``BatchGrad`` extension through
+  the ``accumulate(k)`` lane (``microbatches=k``) and/or the sharded
+  sweep (``mesh=``) — full-dataset rows never need one monolithic sweep;
+* the inverse-curvature product is :class:`repro.curv.GGNOperator` +
+  batched PCG (:func:`repro.curv.cg_solve`) — no factor is ever
+  materialized, so this works exactly where explicit factors don't fit.
+
+The engine's per-sample rows carry the mean-loss 1/M normalization
+(their sum is the mean gradient); this module rescales them by
+``loss.num_units`` so scores are in per-sample-loss units, matching the
+closed forms the oracle tests check.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.engine import plan_sweeps
+from repro.core.extensions import BatchGrad, ExtensionConfig
+from repro.curv import GGNOperator, cg_solve
+
+
+class InfluenceResult(NamedTuple):
+    scores: jnp.ndarray       # [N_train, N_test] (or [N_train] for self)
+    iters: jnp.ndarray        # CG iterations of the inverse-curvature solve
+    resid: jnp.ndarray        # final CG relative residual (per RHS)
+
+
+def _batch_rows(tree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+def _with_microbatches(cfg, n: int, microbatches: Optional[int]):
+    """Translate a microbatch *count* into the cfg's per-device size."""
+    cfg = cfg or ExtensionConfig()
+    if microbatches and microbatches > 1:
+        cfg = dataclasses.replace(
+            cfg, microbatch_size=-(-n // int(microbatches)))
+    return cfg
+
+
+def per_sample_grads(model, params, inputs, targets, loss, *, cfg=None,
+                     mesh=None, shard_axes=("data",),
+                     microbatches: Optional[int] = None, rng=None):
+    """Per-sample gradients ``∇ℓ_i`` as a pytree with leading axis N.
+
+    ``BatchGrad`` through the requested lane composition, rescaled from
+    the engine's 1/M rows to per-sample-loss gradients.
+    """
+    n = _batch_rows(inputs)
+    cfg = cfg or ExtensionConfig()
+    plan = plan_sweeps((BatchGrad,), cfg)
+    if mesh is not None:
+        plan = plan.shard(mesh, shard_axes)
+    if microbatches and microbatches > 1:
+        plan = plan.accumulate(microbatches)
+    res = plan.run(model, params, inputs, targets, loss, cfg=cfg,
+                   rng=rng if rng is not None else jax.random.PRNGKey(0))
+    m = loss.num_units(targets)
+    return jax.tree.map(lambda r: r.astype(jnp.float32) * m,
+                        res.ext["batch_grad"])
+
+
+def _dots(rows_a, rows_b):
+    """⟨a_i, b_j⟩ over pytree leaves → [N_a, N_b]."""
+    na = _batch_rows(rows_a)
+    nb = _batch_rows(rows_b)
+    out = jnp.zeros((na, nb), jnp.float32)
+    for a, b in zip(jax.tree.leaves(rows_a), jax.tree.leaves(rows_b)):
+        out = out + a.reshape(na, -1) @ b.reshape(nb, -1).T
+    return out
+
+
+def _solve_curvature(model, params, x_train, y_train, loss, rhs_rows, *,
+                     damping, cfg, mesh, shard_axes, cg_tol, cg_maxiter):
+    op = GGNOperator(model, params, x_train, y_train, loss,
+                     damping=damping, cfg=cfg, mesh=mesh,
+                     shard_axes=shard_axes)
+    return cg_solve(op.mv_stacked, rhs_rows, tol=cg_tol,
+                    maxiter=cg_maxiter, batched=True)
+
+
+def influence_scores(model, params, x_train, y_train, x_test, y_test,
+                     loss, *, damping: float = 1e-3, cfg=None, mesh=None,
+                     shard_axes=("data",),
+                     microbatches: Optional[int] = None,
+                     cg_tol: float = 1e-8, cg_maxiter: int = 200,
+                     rng=None) -> InfluenceResult:
+    """Influence of every train point on every test point.
+
+    Returns ``scores[i, j] = ∇ℓ_train_iᵀ (G + δI)⁻¹ ∇ℓ_test_j`` with one
+    batched CG solve over the test gradients (the cheap side: solves
+    scale with N_test, the full train set only streams through
+    ``BatchGrad`` rows and GGN-vector products).
+    """
+    n_train = _batch_rows(x_train)
+    cfg = _with_microbatches(cfg, n_train, microbatches)
+    with obs.span("ntk_apps/influence", n_train=n_train,
+                  n_test=_batch_rows(x_test),
+                  microbatches=microbatches or 1):
+        g_test = per_sample_grads(model, params, x_test, y_test, loss,
+                                  cfg=cfg, mesh=mesh, shard_axes=shard_axes,
+                                  microbatches=microbatches, rng=rng)
+        with obs.span("ntk_apps/influence/solve"):
+            sol = _solve_curvature(model, params, x_train, y_train, loss,
+                                   g_test, damping=damping, cfg=cfg,
+                                   mesh=mesh, shard_axes=shard_axes,
+                                   cg_tol=cg_tol, cg_maxiter=cg_maxiter)
+        g_train = per_sample_grads(model, params, x_train, y_train, loss,
+                                   cfg=cfg, mesh=mesh,
+                                   shard_axes=shard_axes,
+                                   microbatches=microbatches, rng=rng)
+        scores = _dots(g_train, sol.x)
+    return InfluenceResult(scores=scores, iters=sol.iters, resid=sol.resid)
+
+
+def self_influence(model, params, x_train, y_train, loss, *,
+                   damping: float = 1e-3, cfg=None, mesh=None,
+                   shard_axes=("data",),
+                   microbatches: Optional[int] = None,
+                   cg_tol: float = 1e-8, cg_maxiter: int = 200,
+                   rng=None) -> InfluenceResult:
+    """``s_i = ∇ℓ_iᵀ (G + δI)⁻¹ ∇ℓ_i`` for every train point.
+
+    The memorization / mislabel-detection score: hard or atypical points
+    move the optimum most on their own behalf.  One batched CG solve with
+    the train gradients as right-hand sides.
+    """
+    n_train = _batch_rows(x_train)
+    cfg = _with_microbatches(cfg, n_train, microbatches)
+    with obs.span("ntk_apps/self_influence", n_train=n_train,
+                  microbatches=microbatches or 1):
+        g_train = per_sample_grads(model, params, x_train, y_train, loss,
+                                   cfg=cfg, mesh=mesh,
+                                   shard_axes=shard_axes,
+                                   microbatches=microbatches, rng=rng)
+        with obs.span("ntk_apps/influence/solve"):
+            sol = _solve_curvature(model, params, x_train, y_train, loss,
+                                   g_train, damping=damping, cfg=cfg,
+                                   mesh=mesh, shard_axes=shard_axes,
+                                   cg_tol=cg_tol, cg_maxiter=cg_maxiter)
+        rows = jnp.stack([
+            jnp.sum(g.reshape(n_train, -1) * s.reshape(n_train, -1), axis=1)
+            for g, s in zip(jax.tree.leaves(g_train),
+                            jax.tree.leaves(sol.x))])
+        scores = jnp.sum(rows, axis=0)
+    return InfluenceResult(scores=scores, iters=sol.iters, resid=sol.resid)

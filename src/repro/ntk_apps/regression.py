@@ -1,0 +1,214 @@
+"""Empirical-NTK kernel regression and GP predictives in Gram space.
+
+The linearized-network / GP correspondence: with ``K`` the empirical NTK
+(class-traced, ``[N, N]``) over train ∪ test rows and ``Y`` the (one-hot
+or regression) targets, the kernel-ridge / GP posterior is
+
+    α     = (K_tt + λI)⁻¹ Y                        [N, C]
+    mean  = K_st α                                  [N*, C]
+    var_j = K_ss[j,j] − k_jᵀ (K_tt + λI)⁻¹ k_j      [N*]
+
+All the network touches is one raw-Jacobian sweep: the kernel assembles
+through the engine's NTK extension (fused ``cross_dot``, streamed
+row-blocks under ``accumulate(k)``, 'master' assembly under a mesh — the
+full matrix lands on shard 0 where the factorization runs).
+
+Three solvers share the ``kernel_solve`` entry point:
+
+* ``'cholesky'`` — direct ``cho_factor``/``cho_solve`` on ``K + λI``.
+* ``'eigh'`` — dense eigendecomposition; ``rank=r`` truncates to the
+  top-r eigenspace (the tail is solved at ``1/λ`` — ridge-only), the
+  spectral view asdfghjkl's kernel catalogue exposes.
+* ``'lanczos'`` — matrix-free: ``curv.lanczos_topk`` Ritz pairs build a
+  spectral preconditioner ``M⁻¹ = U_r diag(1/(λ_r+λ)) U_rᵀ +
+  (I − U_r U_rᵀ)/λ`` and ``curv.cg_solve`` runs preconditioned CG on
+  ``K + λI`` — exact at convergence, fast because the dominant
+  eigenspace (the hard directions) is handled spectrally.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.engine import ntk_total, plan_sweeps
+from repro.core.extensions import NTK, ExtensionConfig
+from repro.curv import cg_solve, lanczos_topk
+
+
+class KernelSolveInfo(NamedTuple):
+    method: str
+    rank: Optional[int]       # truncation / preconditioner rank (None = full)
+    iters: int                # CG iterations (0 for direct solvers)
+    resid: jnp.ndarray        # relative residual ‖(K+λI)X − B‖/‖B‖
+
+
+class GPPredictive(NamedTuple):
+    mean: jnp.ndarray         # [N_test, C] posterior mean
+    var: jnp.ndarray          # [N_test] posterior variance (kernel scale)
+    alpha: jnp.ndarray        # [N_train, C] representer coefficients
+    kernel: jnp.ndarray       # [N_train+N_test, N_train+N_test] joint NTK
+    info: KernelSolveInfo
+
+
+def _batch_rows(tree) -> int:
+    return jax.tree.leaves(tree)[0].shape[0]
+
+
+def _concat_batch(a, b):
+    return jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
+
+
+def ntk_kernel(model, params, inputs, targets, loss, *, cfg=None, mesh=None,
+               shard_axes=("data",), gram_assembly: str = "split",
+               microbatches: Optional[int] = None, rng=None):
+    """Assemble the class-traced empirical NTK ``[N, N]`` for a batch.
+
+    One raw-Jacobian sweep through the engine's ``NTK`` extension;
+    ``mesh`` runs it on the sharded lane (``gram_assembly`` picks the
+    distributed layout — under ``'master'`` the result carries a leading
+    device axis with the full kernel in slot 0), ``microbatches=k``
+    streams it in row blocks.  ``targets`` only feed the loss value; the
+    kernel is loss-independent.
+    """
+    cfg = cfg or ExtensionConfig()
+    plan = plan_sweeps((NTK,), cfg)
+    if mesh is not None:
+        plan = plan.shard(mesh, shard_axes, gram_assembly=gram_assembly)
+    if microbatches and microbatches > 1:
+        plan = plan.accumulate(microbatches)
+    with obs.span("ntk_apps/kernel", n=_batch_rows(inputs),
+                  sharded=mesh is not None,
+                  microbatches=microbatches or 1):
+        res = plan.run(model, params, inputs, targets, loss, cfg=cfg,
+                       rng=rng if rng is not None else jax.random.PRNGKey(0))
+    return ntk_total(res.ext["ntk"])
+
+
+def kernel_solve(K, B, *, ridge: float, solver: str = "cholesky",
+                 rank: Optional[int] = None, iters: Optional[int] = None,
+                 cg_tol: float = 1e-10, cg_maxiter: int = 200, rng=None):
+    """Solve ``(K + ridge·I) X = B`` in Gram space.  Returns ``(X, info)``.
+
+    ``B`` may be ``[n]`` or ``[n, C]``.  See the module docstring for the
+    three solver paths; ``rank`` is required for ``'lanczos'`` and
+    optional (truncation) for ``'eigh'``.
+    """
+    K = jnp.asarray(K, jnp.float32)
+    B = jnp.asarray(B, jnp.float32)
+    squeeze = B.ndim == 1
+    if squeeze:
+        B = B[:, None]
+    n = K.shape[0]
+    lam = jnp.float32(ridge)
+    it = 0
+
+    with obs.span("ntk_apps/kernel_solve", solver=solver, n=n,
+                  rank=rank or 0):
+        if solver == "cholesky":
+            cho = jax.scipy.linalg.cho_factor(
+                K + lam * jnp.eye(n, dtype=K.dtype))
+            X = jax.scipy.linalg.cho_solve(cho, B)
+        elif solver == "eigh":
+            evals, U = jnp.linalg.eigh(K)
+            if rank is None:
+                X = U @ ((U.T @ B) / (evals + lam)[:, None])
+            else:
+                top = jnp.argsort(evals)[::-1][:rank]
+                Ur, lr = U[:, top], evals[top]
+                proj = Ur.T @ B
+                # top-r eigenspace solved spectrally, tail at ridge-only
+                X = Ur @ (proj / (lr + lam)[:, None]) \
+                    + (B - Ur @ proj) / lam
+        elif solver == "lanczos":
+            if rank is None:
+                raise ValueError("kernel_solve: solver='lanczos' needs rank=")
+            top = lanczos_topk(
+                lambda v: K @ v, jnp.zeros((n,), jnp.float32),
+                rng=rng if rng is not None else jax.random.PRNGKey(0),
+                k=rank, iters=iters)
+            Ur = top.eigvecs.T                      # [n, r]
+            inv = 1.0 / (top.eigvals + lam)         # [r]
+
+            def precond(R):                         # R: [C, n] batched rows
+                proj = R @ Ur                       # [C, r]
+                return (proj * inv) @ Ur.T + (R - proj @ Ur.T) / lam
+
+            result = cg_solve(lambda X: X @ K + lam * X, B.T,
+                              tol=cg_tol, maxiter=cg_maxiter,
+                              precond=precond, batched=True)
+            X, it = result.x.T, int(result.iters)
+        else:
+            raise ValueError(f"kernel_solve: unknown solver {solver!r} "
+                             "(want 'cholesky', 'eigh' or 'lanczos')")
+
+        resid = (jnp.linalg.norm(K @ X + lam * X - B)
+                 / jnp.maximum(jnp.linalg.norm(B), 1e-30))
+    if squeeze:
+        X = X[:, 0]
+    return X, KernelSolveInfo(method=solver, rank=rank, iters=it,
+                              resid=resid)
+
+
+def gp_predict(model, params, x_train, y_train, x_test, loss, *,
+               ridge: float = 1e-3, targets=None, solver: str = "cholesky",
+               rank: Optional[int] = None, iters: Optional[int] = None,
+               cg_tol: float = 1e-10, cg_maxiter: int = 200,
+               cfg=None, mesh=None, shard_axes=("data",),
+               gram_assembly: str = "master",
+               microbatches: Optional[int] = None, rng=None) -> GPPredictive:
+    """NTK-GP posterior mean and variance at ``x_test``.
+
+    The joint kernel over ``[train; test]`` assembles in one sweep (so
+    cross and test blocks are exact, not re-linearized), then the solve
+    runs on the train block.  ``targets`` overrides the regression
+    targets (default: one-hot of integer ``y_train``, identity
+    otherwise).  ``mesh`` + ``gram_assembly='master'`` is the intended
+    distributed path: row blocks stream on all shards, the factorization
+    runs on the master copy.  ``microbatches=k`` streams the Jacobian
+    sweep row-blockwise.
+    """
+    n_train, n_test = _batch_rows(x_train), _batch_rows(x_test)
+    inputs = _concat_batch(x_train, x_test)
+    # test-row targets are never consumed by the raw-Jacobian sweep —
+    # fill with zeros of the train targets' structure
+    y_fill = jax.tree.map(
+        lambda a: jnp.zeros((n_test,) + a.shape[1:], a.dtype), y_train)
+    y_all = _concat_batch(y_train, y_fill)
+
+    with obs.span("ntk_apps/gp_predict", n_train=n_train, n_test=n_test,
+                  solver=solver):
+        K = ntk_kernel(model, params, inputs, y_all, loss, cfg=cfg,
+                       mesh=mesh, shard_axes=shard_axes,
+                       gram_assembly=gram_assembly,
+                       microbatches=microbatches, rng=rng)
+        if K.ndim == 3:          # 'master' assembly: [S, N, N], slot 0 full
+            K = K[0]
+        K = jnp.asarray(K, jnp.float32)
+        Ktt = K[:n_train, :n_train]
+        Kst = K[n_train:, :n_train]
+        Kss = K[n_train:, n_train:]
+
+        if targets is not None:
+            Y = jnp.asarray(targets, jnp.float32)
+        else:
+            yt = jnp.asarray(y_train)
+            if jnp.issubdtype(yt.dtype, jnp.integer):
+                n_classes = jax.eval_shape(
+                    lambda p: model.apply(p, x_train), params).shape[-1]
+                Y = jax.nn.one_hot(yt, n_classes, dtype=jnp.float32)
+            else:
+                Y = yt.astype(jnp.float32)
+
+        alpha, info = kernel_solve(Ktt, Y, ridge=ridge, solver=solver,
+                                   rank=rank, iters=iters, cg_tol=cg_tol,
+                                   cg_maxiter=cg_maxiter, rng=rng)
+        mean = Kst @ alpha
+        # posterior variance: one more solve against the cross block
+        W, _ = kernel_solve(Ktt, Kst.T, ridge=ridge, solver=solver,
+                            rank=rank, iters=iters, cg_tol=cg_tol,
+                            cg_maxiter=cg_maxiter, rng=rng)
+        var = jnp.diag(Kss) - jnp.einsum("sn,ns->s", Kst, W)
+    return GPPredictive(mean=mean, var=var, alpha=alpha, kernel=K, info=info)

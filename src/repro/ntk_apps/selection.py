@@ -1,0 +1,164 @@
+"""Active-learning / coreset subset selection off streamed NTK blocks.
+
+Two selectors over the same extracted kernels:
+
+* :func:`greedy_max_diversity` — sequential GP-variance maximization on
+  the class-traced NTK ``[N, N]``: each step picks the point with the
+  largest posterior variance given the points already chosen (computed
+  by an incremental pivoted-Cholesky update, O(N·k) per step).  The
+  marginal-variance pick is exactly the greedy ``log det(K_SS + εI)``
+  maximizer — a diverse, well-spread coreset.
+* :func:`bait_select` — BAIT-style Fisher selection (Ash et al. 2021)
+  on the classwise Gram ``[N, N, C̃, C̃]``: greedily minimize
+  ``tr((F_S + λI)⁻¹ F_pool)`` — pick points whose Fisher information
+  covers the pool's.  The parameter-space objective never materializes:
+  with ``B_S`` the stacked per-sample Jacobian rows, Woodbury turns it
+  into Gram space,
+
+      tr((F_S + λI)⁻¹ F_pool)
+        = (1/λ) [ tr(K) − tr((K_SS + λI)⁻¹ K_S,· K_·,Sᵀ) ]
+
+  so every candidate evaluation is a ``[|S|·C̃]``-sized solve on blocks
+  of the already-extracted kernel.
+
+:func:`select_subset` drives either selector from the engine lanes —
+streamed row blocks under ``microbatches=k``, sharded assembly under
+``mesh=`` — so pool-scale kernels never need a monolithic sweep.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core.engine import gram_total, ntk_total, plan_sweeps
+from repro.core.extensions import ExtensionConfig, GGNGram, NTK
+
+
+class SelectionResult(NamedTuple):
+    indices: jnp.ndarray      # [k] selected pool indices, in pick order
+    scores: jnp.ndarray       # [k] greedy objective at each pick
+    kernel: jnp.ndarray       # the extracted kernel the selection ran on
+
+
+def greedy_max_diversity(K, k: int, *, jitter: float = 1e-6):
+    """Greedy max-variance (≡ max-logdet) selection on a PSD ``[N, N]``.
+
+    Returns ``(indices [k], variances [k])`` — ``variances[t]`` is the
+    picked point's posterior variance given the first ``t`` picks (the
+    ``exp`` of its logdet gain on ``K + jitter·I``); it is non-increasing.
+    """
+    K = jnp.asarray(K, jnp.float32)
+    n = K.shape[0]
+    if not 0 < k <= n:
+        raise ValueError(f"greedy_max_diversity: k={k} outside 1..{n}")
+    # incremental pivoted Cholesky: d holds the residual (conditional)
+    # variance of every candidate; each pick appends the column that
+    # downdates it
+    d = jnp.diag(K) + jnp.float32(jitter)
+    C = jnp.zeros((n, k), jnp.float32)
+    picked, gains = [], []
+    for t in range(k):
+        d_masked = d.at[jnp.array(picked, jnp.int32)].set(-jnp.inf) \
+            if picked else d
+        i = int(jnp.argmax(d_masked))
+        v = d[i]
+        c = (K[:, i].at[i].add(jitter) - C[:, :t] @ C[i, :t]) \
+            / jnp.sqrt(jnp.maximum(v, 1e-30))
+        C = C.at[:, t].set(c)
+        d = d - c * c
+        picked.append(i)
+        gains.append(v)
+    return jnp.array(picked, jnp.int32), jnp.stack(gains)
+
+
+def _as_flat_gram(K):
+    """``[N, N]`` or ``[N, N, C, C]`` → block-flattened ``[N·C, N·C]``."""
+    K = jnp.asarray(K, jnp.float32)
+    if K.ndim == 2:
+        K = K[:, :, None, None]
+    n, _, c, _ = K.shape
+    return K.transpose(0, 2, 1, 3).reshape(n * c, n * c), n, c
+
+
+def bait_select(K, k: int, *, lam: float = 1e-3):
+    """Greedy BAIT selection.  ``K``: ``[N, N]`` or classwise
+    ``[N, N, C̃, C̃]`` (``gram_total`` of the ``ggn_gram`` extension).
+
+    Returns ``(indices [k], objectives [k])`` — ``objectives[t]`` is
+    ``tr((F_S + λI)⁻¹ F_pool)`` after the ``t``-th pick (decreasing).
+    """
+    K2, n, c = _as_flat_gram(K)
+    if not 0 < k <= n:
+        raise ValueError(f"bait_select: k={k} outside 1..{n}")
+    lam = jnp.float32(lam)
+    tr_pool = jnp.trace(K2)
+
+    def objective(rows):
+        # Woodbury: tr((F_S+λI)⁻¹F_pool) in Gram space (module docstring)
+        Kss = K2[jnp.ix_(rows, rows)]
+        Ksp = K2[rows, :]
+        m = rows.shape[0]
+        inner = jnp.linalg.solve(Kss + lam * jnp.eye(m, dtype=K2.dtype),
+                                 Ksp @ Ksp.T)
+        return (tr_pool - jnp.trace(inner)) / lam
+
+    picked, objs = [], []
+    obj_batch = jax.vmap(objective)
+    for _ in range(k):
+        cands = np.array([j for j in range(n) if j not in picked], np.int32)
+        base = (np.concatenate([np.arange(c) + i * c for i in picked])
+                if picked else np.zeros((0,), np.int64))
+        rows = np.stack([np.concatenate([base, np.arange(c) + j * c])
+                         for j in cands])
+        vals = obj_batch(jnp.asarray(rows, jnp.int32))
+        a = int(jnp.argmin(vals))
+        picked.append(int(cands[a]))
+        objs.append(float(vals[a]))
+    return jnp.array(picked, jnp.int32), jnp.array(objs, jnp.float32)
+
+
+def select_subset(model, params, inputs, targets, loss, k: int, *,
+                  method: str = "diversity", lam: float = 1e-3,
+                  jitter: float = 1e-6, cfg=None, mesh=None,
+                  shard_axes=("data",), gram_assembly: str = "master",
+                  microbatches: Optional[int] = None,
+                  rng=None) -> SelectionResult:
+    """Pick ``k`` of the pool via the requested selector.
+
+    ``method='diversity'`` extracts the class-traced NTK, ``'bait'`` the
+    loss-scaled classwise Gram (``ggn_gram`` — Fisher blocks for the
+    canonical losses).  Extraction composes with ``mesh=`` (under
+    ``gram_assembly='master'`` the selection runs on shard 0's full
+    copy) and ``microbatches=k`` row-block streaming.
+    """
+    if method not in ("diversity", "bait"):
+        raise ValueError(f"select_subset: unknown method {method!r} "
+                         "(want 'diversity' or 'bait')")
+    cfg = cfg or ExtensionConfig()
+    ext = NTK if method == "diversity" else GGNGram
+    plan = plan_sweeps((ext,), cfg)
+    if mesh is not None:
+        plan = plan.shard(mesh, shard_axes, gram_assembly=gram_assembly)
+    if microbatches and microbatches > 1:
+        plan = plan.accumulate(microbatches)
+    n = jax.tree.leaves(inputs)[0].shape[0]
+    with obs.span("ntk_apps/select_subset", method=method, n=n, k=k,
+                  sharded=mesh is not None,
+                  microbatches=microbatches or 1):
+        res = plan.run(model, params, inputs, targets, loss, cfg=cfg,
+                       rng=rng if rng is not None else jax.random.PRNGKey(0))
+        if method == "diversity":
+            K = ntk_total(res.ext["ntk"])
+            if K.ndim == 3:      # 'master' assembly: leading device axis
+                K = K[0]
+            idx, scores = greedy_max_diversity(K, k, jitter=jitter)
+        else:
+            K = gram_total(res.ext["ggn_gram"])
+            if K.ndim == 5:      # 'master' assembly: leading device axis
+                K = K[0]
+            idx, scores = bait_select(K, k, lam=lam)
+    return SelectionResult(indices=idx, scores=scores, kernel=K)

@@ -1,0 +1,100 @@
+"""Shared dense oracles for the extension / curvature / NTK suites.
+
+Every suite that pins an engine quantity to an explicitly materialized
+counterpart (`jax.jacrev` Jacobians, `jax.hessian` losses, the 4-index
+NTK) imports from here instead of re-deriving the construction —
+one implementation, one set of conventions:
+
+* Jacobians are of ``model.apply`` w.r.t. the raveled parameter vector;
+* the dense GGN is ``Jᵀ H J`` with ``H`` the *mean*-loss Hessian in
+  logit space (the engine's 1/M normalization);
+* the scaled Jacobian ``J' = √Hᵀ J`` carries the loss factorization the
+  exact second-order extensions propagate — ``J'J'ᵀ`` is the
+  ``ggn_gram`` kernel, ``J'ᵀJ'`` the GGN;
+* the materialized NTK is the raw (loss-free) 4-index kernel
+  ``K[n, c, m, c'] = ⟨J_c(n), J_{c'}(m)⟩``.
+
+These are exactly the O(N·C·P) / O(P²) constructions the library
+avoids; keep them on paper-scale nets.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import Activation, Dense, Sequential
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+def tiny_mlp(n=11, d=5, h=7, c=3, act="tanh", seeds=(0, 1, 2)):
+    """The suites' standard paper-scale net + batch:
+    ``(model, params, x [n, d], y [n] ints < c)``."""
+    model = Sequential([Dense(d, h), Activation(act), Dense(h, c)])
+    params = model.init(jax.random.PRNGKey(seeds[0]))
+    x = jax.random.normal(jax.random.PRNGKey(seeds[1]), (n, d))
+    y = jax.random.randint(jax.random.PRNGKey(seeds[2]), (n,), 0, c)
+    return model, params, x, y
+
+
+def flat_jacobian(model, params, x):
+    """``(flat, unravel, J [N, C, P])`` — the raveled-parameter Jacobian."""
+    flat, unravel = ravel_pytree(params)
+    return flat, unravel, jax.jacrev(
+        lambda f: model.apply(unravel(f), x))(flat)
+
+
+def dense_ggn(model, params, x, y, loss):
+    """``(Jᵀ H J, flat, unravel)`` with the full-batch (block-diagonal)
+    mean-loss Hessian."""
+    flat, unravel, J = flat_jacobian(model, params, x)
+    z = model.apply(params, x)
+    Hl = jax.hessian(
+        lambda zf: loss.value(zf.reshape(z.shape), y))(z.reshape(-1))
+    Jf = J.reshape(-1, flat.size)
+    return Jf.T @ Hl @ Jf, flat, unravel
+
+
+def dense_hessian(model, params, x, y, loss):
+    """``(∇²L(θ), flat, unravel)`` — the full mean-loss Hessian."""
+    flat, unravel = ravel_pytree(params)
+    return jax.hessian(
+        lambda f: loss.value(model.apply(unravel(f), x), y))(flat), \
+        flat, unravel
+
+
+def scaled_jacobian(model, params, x, y, loss):
+    """``J' = √Hᵀ J`` as ``[C̃, N, P]`` rows — the loss-scaled Jacobian
+    factor; ``einsum('cnp,dmp->nmcd')`` of it is the ``ggn_gram``
+    oracle, ``J'ᵀJ'`` the dense GGN."""
+    flat, unravel, J = flat_jacobian(model, params, x)
+    z = model.apply(params, x)
+    S = loss.sqrt_hessian(z, y)                      # [C̃, N, C]
+    return jnp.einsum("cnv,nvp->cnp", S, J), flat, unravel
+
+
+def materialized_ntk(model, params, x):
+    """Full 4-index empirical NTK ``K[n, c, m, c']`` from the
+    materialized Jacobian.  ``einsum('ncmc->nm')`` is the class-traced
+    ``ntk`` convention, ``'ncmc->nmc'`` the classwise one."""
+    n = jax.tree.leaves(x)[0].shape[0]
+    flat, _, J = flat_jacobian(model, params, x)
+    c = J.shape[1]
+    Jf = J.reshape(n * c, flat.size)
+    return np.asarray((Jf @ Jf.T).reshape(n, c, n, c))
+
+
+def spearman(a, b):
+    """Spearman rank correlation (ties broken by position — fine for
+    the continuous scores the influence tests compare)."""
+    a, b = np.asarray(a).ravel(), np.asarray(b).ravel()
+
+    def ranks(v):
+        r = np.empty(v.size)
+        r[np.argsort(v)] = np.arange(v.size)
+        return r
+
+    ra, rb = ranks(a), ranks(b)
+    ra, rb = ra - ra.mean(), rb - rb.mean()
+    denom = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+    return float((ra * rb).sum() / max(denom, 1e-30))

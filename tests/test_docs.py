@@ -99,8 +99,18 @@ def test_readme_points_at_docs():
 @pytest.mark.slow
 def test_mkdocs_strict_build_if_available():
     """When the doc toolchain happens to be installed (dev machines),
-    run the real strict build; elsewhere skip — CI's docs lane owns it."""
-    pytest.importorskip("mkdocs")
+    run the real strict build; elsewhere skip — CI's docs lane owns it
+    and sets REPRO_REQUIRE_MKDOCS=1, turning a missing toolchain there
+    into a hard failure instead of a silent perpetual skip."""
+    if os.environ.get("REPRO_REQUIRE_MKDOCS"):
+        import mkdocs  # noqa: F401 — the docs lane must never skip this
+    else:
+        pytest.importorskip(
+            "mkdocs",
+            reason="mkdocs not installed: the hermetic tier-1 lanes skip "
+                   "the strict build by design; the docs CI lane (which "
+                   "installs requirements-docs.txt) runs it with "
+                   "REPRO_REQUIRE_MKDOCS=1")
     import subprocess
     import sys as _sys
     out = subprocess.run(

@@ -26,7 +26,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.papernets import c2d2
 from repro.core import (
-    Activation,
     CrossEntropyLoss,
     Dense,
     DiagGGN,
@@ -55,17 +54,15 @@ from repro.laplace import (
 )
 from repro.laplace.posterior import _map_kron
 
+from _oracles import dense_ggn, tiny_mlp
+
 N, D, H, C = 9, 6, 7, 4
 LOSS = CrossEntropyLoss()
 
 
 @pytest.fixture(scope="module")
 def setup():
-    model = Sequential([Dense(D, H), Activation("sigmoid"), Dense(H, C)])
-    params = model.init(jax.random.PRNGKey(0))
-    x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
-    y = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, C)
-    return model, params, x, y
+    return tiny_mlp(N, D, H, C, act="sigmoid")
 
 
 @pytest.fixture(scope="module")
@@ -90,11 +87,7 @@ def _fitted(structure):
     hypothesis fallback shim cannot mix @given with pytest fixtures);
     prior precision is applied at evaluation time, not fit time."""
     if structure not in _FIT_CACHE:
-        model = Sequential([Dense(D, H), Activation("sigmoid"),
-                            Dense(H, C)])
-        params = model.init(jax.random.PRNGKey(0))
-        x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
-        y = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, C)
+        model, params, x, y = tiny_mlp(N, D, H, C, act="sigmoid")
         _FIT_CACHE[structure] = fit_posterior(model, params, x, y, LOSS,
                                               structure=structure)
     return _FIT_CACHE[structure]
@@ -127,6 +120,18 @@ def test_kron_logdet_matches_dense_oracle(lam):
     want = sum(terms) - post.n_params() * jnp.log(lam)
     np.testing.assert_allclose(float(post.log_det_ratio(lam)), float(want),
                                rtol=2e-4)
+
+
+def test_diag_curvature_matches_dense_ggn_diagonal(setup):
+    """The fitted diag posterior's curvature tree == diag(Jᵀ H J) of the
+    materialized mean-loss GGN (the shared `_oracles` construction)."""
+    model, params, x, y = setup
+    post = _fitted("diag")
+    G, flat, _ = dense_ggn(model, params, x, y, LOSS)
+    got = jnp.concatenate([
+        l.reshape(-1) for l in jax.tree.leaves(post.curv)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp.diag(G)),
+                               rtol=3e-5, atol=3e-5)
 
 
 def test_diag_sampling_covariance_matches_inverse_precision(setup):

@@ -21,13 +21,10 @@ import pytest
 from jax.flatten_util import ravel_pytree
 
 from repro.core import (
-    Activation,
     CrossEntropyLoss,
-    Dense,
     ExtensionConfig,
     GGNGram,
     MSELoss,
-    Sequential,
     gram_total,
     run,
 )
@@ -41,40 +38,16 @@ from repro.curv import (
     slq_logdet,
 )
 
+from _oracles import (TOL, dense_ggn as _dense_ggn,
+                      dense_hessian as _dense_hess, scaled_jacobian,
+                      tiny_mlp)
+
 N, D, H, C = 11, 5, 7, 3
-TOL = dict(rtol=3e-5, atol=3e-5)
 
 
 @pytest.fixture(scope="module")
 def setup():
-    model = Sequential([Dense(D, H), Activation("tanh"), Dense(H, C)])
-    params = model.init(jax.random.PRNGKey(0))
-    x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
-    y = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, C)
-    return model, params, x, y
-
-
-def _flat(model, params, x):
-    flat, unravel = ravel_pytree(params)
-    return flat, unravel, jax.jacrev(
-        lambda f: model.apply(unravel(f), x))(flat)     # [N, C, P]
-
-
-def _dense_ggn(model, params, x, y, loss):
-    """Jᵀ H J with the full-batch (block-diagonal) loss Hessian."""
-    flat, unravel, J = _flat(model, params, x)
-    z = model.apply(params, x)
-    Hl = jax.hessian(
-        lambda zf: loss.value(zf.reshape(z.shape), y))(z.reshape(-1))
-    Jf = J.reshape(-1, flat.size)
-    return Jf.T @ Hl @ Jf, flat, unravel
-
-
-def _dense_hess(model, params, x, y, loss):
-    flat, unravel = ravel_pytree(params)
-    return jax.hessian(
-        lambda f: loss.value(model.apply(unravel(f), x), y))(flat), \
-        flat, unravel
+    return tiny_mlp(N, D, H, C)
 
 
 @pytest.mark.parametrize("loss", [CrossEntropyLoss(), MSELoss()],
@@ -126,10 +99,7 @@ def test_shard_accumulate_product_differential(k):
     from repro.launch.mesh import make_data_mesh
 
     n = 16  # divisible by the multidevice lane's 8 devices
-    model = Sequential([Dense(D, H), Activation("tanh"), Dense(H, C)])
-    params = model.init(jax.random.PRNGKey(0))
-    x = jax.random.normal(jax.random.PRNGKey(1), (n, D))
-    y = jax.random.randint(jax.random.PRNGKey(2), (n,), 0, C)
+    model, params, x, y = tiny_mlp(n, D, H, C)
     loss = CrossEntropyLoss()
     flat, unravel = ravel_pytree(params)
     v = unravel(jax.random.normal(jax.random.PRNGKey(4), flat.shape))
@@ -198,10 +168,7 @@ def test_ggn_gram_matches_jacobian_factor_gram(setup):
     factor the paper's exact extensions propagate (√Hᵀ J)."""
     model, params, x, y = setup
     loss = CrossEntropyLoss()
-    flat, unravel, J = _flat(model, params, x)
-    z = model.apply(params, x)
-    S = loss.sqrt_hessian(z, y)                     # [C, N, C]
-    Jp = jnp.einsum("cnv,nvp->cnp", S, J)           # J' rows by (c, n)
+    Jp, flat, unravel = scaled_jacobian(model, params, x, y, loss)
     want = jnp.einsum("cnp,dmp->nmcd", Jp, Jp)      # [N, N, C, C]
     res = run(model, params, x, y, loss, extensions=(GGNGram,))
     got = gram_total(res.ext["ggn_gram"])

@@ -23,11 +23,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    Activation,
     CrossEntropyLoss,
-    Dense,
     ExtensionConfig,
-    Sequential,
     by_name,
     ntk_total,
     plan_sweeps,
@@ -37,6 +34,8 @@ from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.launch.mesh import make_data_mesh
 
+from _oracles import materialized_ntk, tiny_mlp
+
 N, D, H, C = 11, 5, 7, 3
 LOSS = CrossEntropyLoss()
 NTK_EXTS = (by_name("ntk"), by_name("ntk_classwise"))
@@ -44,26 +43,14 @@ NTK_EXTS = (by_name("ntk"), by_name("ntk_classwise"))
 
 @pytest.fixture(scope="module")
 def setup():
-    model = Sequential([Dense(D, H), Activation("tanh"), Dense(H, C)])
-    params = model.init(jax.random.PRNGKey(0))
-    x = jax.random.normal(jax.random.PRNGKey(1), (N, D))
-    y = jax.random.randint(jax.random.PRNGKey(2), (N,), 0, C)
-    return model, params, x, y
+    return tiny_mlp(N, D, H, C)
 
 
 @pytest.fixture(scope="module")
 def oracle_kernel(setup):
     """Full 4-index kernel K[n, c, m, c'] from the materialized Jacobian."""
     model, params, x, _ = setup
-
-    def f(p):
-        z, _ = model.forward_tape(p, x)
-        return z
-
-    J = jax.jacrev(f)(params)
-    Jf = jnp.concatenate(
-        [l.reshape(N * C, -1) for l in jax.tree.leaves(J)], axis=1)
-    return np.asarray((Jf @ Jf.T).reshape(N, C, N, C))
+    return materialized_ntk(model, params, x)
 
 
 def _run(setup, cfg=ExtensionConfig(), exts=NTK_EXTS):

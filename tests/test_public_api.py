@@ -31,7 +31,10 @@ EXPECTED_SURFACE = {
     "Reducer", "register_reducer",
     # matrix-free curvature
     "GGNOperator", "HessianOperator", "cg_solve", "ggn_vp", "hvp",
-    "slq_logdet",
+    "lanczos_topk", "slq_logdet",
+    # NTK consumers
+    "gp_predict", "influence_scores", "ntk_kernel", "select_subset",
+    "self_influence",
     # uncertainty
     "fit_posterior",
     # observability

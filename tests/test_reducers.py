@@ -51,6 +51,20 @@ def _partial(name, rng):
         i = int(rng.integers(0, 3)) * 2
         full[i:i + 2, i:i + 2] = rng.normal(size=(2, 2))
         return jnp.asarray(full)
+    if name == "gram_pair":
+        # same disjoint-block scatter with a trailing column pair (the
+        # ggn_gram [N, N, C̃, C̃] layout): a symmetric-in-(block, pair)
+        # diagonal scatter plus one mirrored off-diagonal pair, so the
+        # partial respects the pair-kernel symmetry the driver maintains
+        full = np.zeros((6, 6, 2, 2))
+        i = int(rng.integers(0, 3)) * 2
+        blk = rng.normal(size=(2, 2, 2, 2))
+        full[i:i + 2, i:i + 2] = blk + blk.transpose(1, 0, 3, 2)
+        j = (i + 2) % 6
+        off = rng.normal(size=(2, 2, 2, 2))
+        full[i:i + 2, j:j + 2] = off
+        full[j:j + 2, i:i + 2] = off.transpose(1, 0, 3, 2)
+        return jnp.asarray(full)
     return jnp.asarray(rng.normal(size=(3, 2)))
 
 
@@ -117,6 +131,35 @@ def test_placement_and_streaming_form_are_reported():
     assert REDUCERS["gram"].pairwise and REDUCERS["gram"].local_rows
     for red in REDUCERS.values():
         assert isinstance(red.streaming_form, str) and red.streaming_form
+
+
+def test_gram_pair_capability_flags():
+    """gram_pair inherits the full Gram driver contract: the streamed
+    pair passes and the sharded row-block assembly both key off these."""
+    red = REDUCERS["gram_pair"]
+    assert red.pairwise and red.local_rows and red.commutative
+    assert red.placement == "sharded(axis0)"
+    assert red.streaming_form
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_gram_pair_transpose_block_mirrors_sample_and_column_pair(seed):
+    """transpose_block on a [B1, B2, C, C] pair block: entry
+    (n, m, c, c') lands at (m, n, c', c) — the mirror the streamed pair
+    pass writes for block (q, p) — and applying it twice is identity.
+    The plain gram mirror only swaps the sample axes."""
+    rng = np.random.default_rng(seed)
+    blk = jnp.asarray(rng.normal(size=(3, 2, 4, 4)))
+    t = REDUCERS["gram_pair"].transpose_block(blk)
+    assert t.shape == (2, 3, 4, 4)
+    np.testing.assert_allclose(np.asarray(t),
+                               np.asarray(blk).transpose(1, 0, 3, 2))
+    _assert_tree_close(REDUCERS["gram_pair"].transpose_block(t), blk)
+    sq = jnp.asarray(rng.normal(size=(3, 3, 4, 4)))
+    np.testing.assert_allclose(
+        np.asarray(REDUCERS["gram"].transpose_block(sq)),
+        np.asarray(sq).transpose(1, 0, 2, 3))
 
 
 def test_string_alias_warns_with_replacement():

@@ -227,10 +227,21 @@ def test_sharded_mc_needs_seed_or_rng(setup):
         sp.run(model, params, x, y, CrossEntropyLoss())
 
 
-@pytest.mark.skipif(jax.device_count() < 2,
-                    reason="needs a multi-device process (tests-multidevice "
-                           "lane); divisibility is trivially satisfied at 1")
+@pytest.mark.skipif(jax.device_count() < 2
+                    and not os.environ.get("REPRO_REQUIRE_MULTIDEVICE"),
+                    reason="needs a multi-device process: divisibility is "
+                           "trivially satisfied at 1 device, so the check "
+                           "only bites on a real mesh; the tests-multidevice "
+                           "CI lane (8 virtual devices) runs it with "
+                           "REPRO_REQUIRE_MULTIDEVICE=1")
 def test_sharded_batch_divisibility_error(setup):
+    # under the require flag a 1-device process is a lane misconfiguration,
+    # not a reason to skip
+    assert jax.device_count() >= 2, (
+        "REPRO_REQUIRE_MULTIDEVICE is set but the process owns "
+        f"{jax.device_count()} device(s) — the multidevice lane must set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax "
+        "initializes")
     model, params, x, y = setup
     sp = plan_sweeps((), ExtensionConfig()).shard(make_data_mesh(), "data")
     with pytest.raises(ValueError, match="divisible"):
